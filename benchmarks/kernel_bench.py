@@ -1,0 +1,64 @@
+"""Kernel micro-benchmarks (CPU wall time of the jnp oracle + interpret
+kernel, plus the TPU-roofline bytes/flops each call would move).
+
+On this CPU container the wall times exercise the harness; the derived
+column reports the v5e-roofline time so the table is meaningful for the
+target hardware (STREAM envelope = HBM roof; attention = MXU roof).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hlo_analysis import TPU_V5E
+from repro.kernels.flash_attention import attention_ref
+from repro.kernels.stream import bytes_moved, ref as stream_ref
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def stream_rows():
+    rows = []
+    n = 4 * 2**20  # 4 Mi elems f32 = 16 MB per array
+    a = jnp.ones((n,), jnp.float32)
+    b = jnp.ones((n,), jnp.float32)
+    jitted = {
+        "copy": jax.jit(stream_ref.copy_ref),
+        "scale": jax.jit(lambda x: stream_ref.scale_ref(x, 3.0)),
+        "add": jax.jit(stream_ref.add_ref),
+        "triad": jax.jit(lambda x, y: stream_ref.triad_ref(x, y, 3.0)),
+    }
+    for op, fn in jitted.items():
+        args = (a,) if op in ("copy", "scale") else (a, b)
+        t = _time(fn, *args)
+        nbytes = bytes_moved(op, n, 4)
+        roof = nbytes / TPU_V5E.hbm_bw
+        rows.append((f"stream_{op}", round(t * 1e6, 1), nbytes,
+                     f"{roof*1e6:.1f}us@819GB/s"))
+    return rows, ("kernel", "cpu_us_per_call", "bytes",
+                  "v5e_hbm_roof_time")
+
+
+def attention_rows():
+    rows = []
+    for (b, s, h, g, d) in [(1, 1024, 8, 8, 128), (1, 2048, 8, 2, 128)]:
+        q = jnp.ones((b, s, h, d), jnp.bfloat16)
+        k = jnp.ones((b, s, g, d), jnp.bfloat16)
+        v = jnp.ones((b, s, g, d), jnp.bfloat16)
+        fn = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+        t = _time(fn, q, k, v)
+        flops = 4 * b * h * d * s * s / 2
+        roof = flops / TPU_V5E.peak_flops
+        rows.append((f"attn_b{b}s{s}h{h}g{g}", round(t * 1e6, 1),
+                     int(flops), f"{roof*1e6:.1f}us@197TF"))
+    return rows, ("kernel", "cpu_us_per_call", "flops", "v5e_mxu_roof_time")

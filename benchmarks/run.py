@@ -1,0 +1,76 @@
+"""Benchmark driver: one section per DAMOV table/figure + the TPU tables.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only SECTION]
+
+Sections map 1:1 to paper artifacts:
+
+- fig1   — roofline + MPKI vs NDP speedup (Fig. 1)
+- fig3   — locality-based clustering (Fig. 3)
+- fig4   — LFMR/MPKI per function (Fig. 4)
+- fig5   — scalability curves, 3 systems (Figs. 5, 16)
+- fig7   — energy breakdowns (Figs. 7-17)
+- fig18  — per-class NDP-speedup summary + §3.5 validation accuracy
+- case1..case4 — §5 case studies
+- roofline — §Roofline TPU table (from results/dryrun artifacts)
+- kernels  — Pallas kernel microbench + v5e roofline bounds
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import kernel_bench, paper_figures, roofline_table
+
+
+def emit(section: str, rows, header) -> None:
+    print(f"\n## {section}")
+    print(",".join(str(h) for h in header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    sys.stdout.flush()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced trace length (CI)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    refs = 20_000 if args.fast else 60_000
+    suite = paper_figures._suite(refs)
+
+    sections = {
+        "fig1": lambda: paper_figures.fig1_roofline_mpki(suite),
+        "fig3": lambda: paper_figures.fig3_locality_clustering(suite),
+        "fig4": lambda: paper_figures.fig4_lfmr_mpki(suite),
+        "fig5": lambda: paper_figures.fig5_scalability(suite),
+        "fig5_nuca": lambda: paper_figures.fig5_scalability(suite, nuca=True),
+        "fig7": lambda: paper_figures.fig7_energy(suite),
+        "fig18": paper_figures.fig18_summary_and_validation,
+        "case1": lambda: paper_figures.case1_noc(suite),
+        "case2": lambda: paper_figures.case2_accelerators(suite),
+        "case3": lambda: paper_figures.case3_core_models(suite),
+        "case4": lambda: paper_figures.case4_offload(suite),
+        "roofline": roofline_table.rows,
+        "kernels_stream": kernel_bench.stream_rows,
+        "kernels_attention": kernel_bench.attention_rows,
+    }
+    if args.fast:
+        sections.pop("fig18")  # the 70-workload held-out sweep is slow
+
+    for name, fn in sections.items():
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        rows, header = fn()
+        emit(name, rows, header)
+        print(f"# {name}: {len(rows)} rows in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

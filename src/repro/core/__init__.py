@@ -1,0 +1,37 @@
+"""DAMOV methodology core: the paper's contribution as a composable library.
+
+Submodules:
+
+- ``locality``     — architecture-independent spatial/temporal metrics (Step 2)
+- ``cachesim``     — trace-driven hierarchy simulator (Step 3 substrate)
+- ``tracegen``     — synthetic DAMOV workload families
+- ``scalability``  — Host / Host+PF / NDP core-sweep timing + energy model
+- ``energy``       — Table 1 energy constants
+- ``classify``     — six-class bottleneck classifier + §3.5 validation
+- ``casestudies``  — §5 case studies (NoC, accelerators, core models, BB offload)
+- ``hlo_analysis`` — Step 3 re-based onto compiled XLA artifacts (TPU)
+"""
+
+from . import (  # noqa: F401
+    analytic,
+    cachesim,
+    casestudies,
+    classify,
+    energy,
+    hlo_analysis,
+    locality,
+    scalability,
+    tracegen,
+)
+
+__all__ = [
+    "analytic",
+    "cachesim",
+    "casestudies",
+    "classify",
+    "energy",
+    "hlo_analysis",
+    "locality",
+    "scalability",
+    "tracegen",
+]

@@ -1,0 +1,3 @@
+"""Data pipeline."""
+
+from .pipeline import SyntheticTokens, make_batch_specs  # noqa: F401

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel package has ``kernel.py`` (pl.pallas_call + BlockSpec VMEM
+tiling), ``ops.py`` (jitted public wrapper with CPU fallback) and ``ref.py``
+(pure-jnp oracle used by the allclose test sweeps):
+
+- ``flash_attention`` — online-softmax attention (the LM hot-spot; never
+  materializes [S, S] scores in HBM; causal tiles skipped).
+- ``stream``          — STREAM Copy/Scale/Add/Triad, the DAMOV Class-1a
+  bandwidth archetypes; used for the HBM-roof envelope benchmark.
+- ``token_gather``    — scalar-prefetch DMA row gather, the TPU-idiomatic
+  adaptation of DAMOV's irregular-access classes (MoE dispatch, paged KV).
+"""
+
+from . import flash_attention, stream, token_gather  # noqa: F401

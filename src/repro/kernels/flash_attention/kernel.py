@@ -1,0 +1,126 @@
+"""Flash attention as a Pallas TPU kernel.
+
+TPU adaptation of the FlashAttention insight (never materialize [S, S]
+scores in HBM): the grid walks (batch*q_heads, q_blocks, kv_blocks); each
+program holds a [BQ, D] query tile and one [BK, D] K/V tile in VMEM,
+maintains the online-softmax running (m, l, acc) in VMEM scratch across the
+kv_block axis (the innermost, sequential grid dimension), and writes the
+normalized [BQ, D] output tile once on the last kv step.
+
+Block shapes are MXU-aligned (BQ, BK multiples of 128; D = head_dim is the
+lane dimension).  Causal masking is done in-register against the absolute
+positions derived from the grid indices; fully-masked kv tiles are skipped
+via ``pl.when`` so the causal kernel does ~half the work (the roofline win
+vs. the naive kernel, on top of the HBM-traffic win).
+
+GQA is handled by the index_map: query head h reads KV head h // rep.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, bq: int, bk: int, n_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _body():
+        q = q_ref[0].astype(jnp.float32)          # [BQ, D]
+        k = k_ref[0].astype(jnp.float32)          # [BK, D]
+        v = v_ref[0].astype(jnp.float32)          # [BK, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [BQ, BK]
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+        m_prev = m_scr[...]                        # [BQ, 1]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                     # [BQ, BK]
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    if causal:
+        # Skip kv tiles strictly above the diagonal: the first query row of
+        # this q tile is qi*bq; a kv tile starting at ki*bk is fully masked
+        # when ki*bk > qi*bq + bq - 1.
+        pl.when(ki * bk <= qi * bq + bq - 1)(_body)
+    else:
+        _body()
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: [B, Sq, H, D]; k, v: [B, Sk, G, D] (GQA); returns [B, Sq, H, D]."""
+    b, sq, h, d = q.shape
+    _, sk, g, _ = k.shape
+    rep = h // g
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    n_q, n_kv = sq // bq, sk // bk
+    scale = d ** -0.5
+
+    # Layout: fold heads into the leading grid axis; Pallas blocks see
+    # [1, BQ, D] q tiles and [1, BK, D] kv tiles.
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * g, sk, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * g, sk, d)
+
+    grid = (b * h, n_q, n_kv)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        return ((bh // h) * g + (bh % h) // rep, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          bq=bq, bk=bk, n_kv=n_kv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), q_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running denom
+            pltpu.VMEM((bq, d), jnp.float32),   # running acc
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,24 @@
+"""Jitted public entry points for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import flash_attention
+from .ref import attention_ref
+
+__all__ = ["flash_attention", "attention_ref", "mha"]
+
+
+def mha(q, k, v, *, causal: bool = True, interpret: bool | None = None):
+    """Dispatch: Pallas kernel on TPU, oracle elsewhere (CPU tests can
+    force the kernel with ``interpret=True``)."""
+    on_tpu = jax.devices()[0].platform == "tpu"
+    if interpret is None:
+        interpret = not on_tpu
+    if on_tpu or interpret:
+        sq, sk = q.shape[1], k.shape[1]
+        if sq % 128 == 0 and sk % 128 == 0 and q.shape[-1] % 8 == 0:
+            return flash_attention(q, k, v, causal=causal,
+                                   interpret=interpret)
+    return attention_ref(q, k, v, causal=causal)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Materialized-scores softmax attention with GQA and optional causal mask —
+the numerical ground truth the Pallas kernel must match.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(q, k, v, *, causal: bool = True) -> jax.Array:
+    """q: [B, Sq, H, D]; k, v: [B, Sk, G, D] with H = G * rep."""
+    b, sq, h, d = q.shape
+    g = k.shape[2]
+    rep = h // g
+    qh = q.reshape(b, sq, g, rep, d)
+    scale = d ** -0.5
+    scores = jnp.einsum("bsgrd,btgd->bgrst", qh, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(k.shape[1])[None, :]
+        scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrst,btgd->bsgrd", w, v)
+    return out.reshape(b, sq, h, d)

@@ -1,0 +1,8 @@
+from .kernel import (  # noqa: F401
+    stream_add,
+    stream_copy,
+    stream_scale,
+    stream_triad,
+)
+from .ops import bytes_moved  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,93 @@
+"""STREAM (Copy/Scale/Add/Triad) as Pallas TPU kernels.
+
+These are the DAMOV Class-1a archetypes (§3.3.1: DRAM-bandwidth-bound,
+LFMR = 1, zero reuse) realized on the TPU memory hierarchy: the kernels are
+pure HBM->VMEM->HBM streams whose only tuning dimension is the block shape
+(VMEM tile) that keeps the DMA engine saturated.  They double as the
+benchmark used to measure the achievable fraction of the 819 GB/s HBM roof
+(the paper's STREAM-Copy envelope measurement, §1, re-based to TPU).
+
+Block geometry: inputs are reshaped to [rows, 8, 128]-aligned 2-D tiles;
+one grid step streams a [BLOCK_ROWS, LANES] tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["stream_copy", "stream_scale", "stream_add", "stream_triad"]
+
+LANES = 128
+DEFAULT_BLOCK_ROWS = 512
+
+
+def _copy_kernel(a_ref, o_ref):
+    o_ref[...] = a_ref[...]
+
+
+def _scale_kernel(q_ref, a_ref, o_ref):
+    o_ref[...] = q_ref[0] * a_ref[...]
+
+
+def _add_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+def _triad_kernel(q_ref, a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + q_ref[0] * b_ref[...]
+
+
+def _as_tiles(x, block_rows):
+    n = x.size
+    rows = n // LANES
+    assert rows * LANES == n, f"size {n} not a multiple of {LANES}"
+    assert rows % block_rows == 0, (rows, block_rows)
+    return x.reshape(rows, LANES), rows
+
+
+def _launch(kernel, arrays, scalars, block_rows, interpret):
+    tiles = [_as_tiles(a, block_rows) for a in arrays]
+    rows = tiles[0][1]
+    grid = (rows // block_rows,)
+    in_specs = [pl.BlockSpec((1,), lambda i: (0,))] * len(scalars) + [
+        pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    ] * len(arrays)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), arrays[0].dtype),
+        interpret=interpret,
+    )(*scalars, *[t[0] for t in tiles])
+    return out.reshape(arrays[0].shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def stream_copy(a, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                interpret: bool = False):
+    return _launch(_copy_kernel, [a], [], block_rows, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def stream_scale(a, q, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                 interpret: bool = False):
+    return _launch(_scale_kernel, [a], [jnp.atleast_1d(q).astype(a.dtype)],
+                   block_rows, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def stream_add(a, b, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+               interpret: bool = False):
+    return _launch(_add_kernel, [a, b], [], block_rows, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def stream_triad(a, b, q, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                 interpret: bool = False):
+    return _launch(_triad_kernel, [a, b],
+                   [jnp.atleast_1d(q).astype(a.dtype)], block_rows, interpret)

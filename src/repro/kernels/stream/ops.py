@@ -1,0 +1,15 @@
+"""Jitted STREAM entry points + bandwidth accounting helpers."""
+
+from __future__ import annotations
+
+from .kernel import stream_add, stream_copy, stream_scale, stream_triad
+from . import ref
+
+__all__ = ["stream_copy", "stream_scale", "stream_add", "stream_triad",
+           "bytes_moved", "ref"]
+
+
+def bytes_moved(op: str, n_elems: int, itemsize: int) -> int:
+    """HBM bytes per invocation (reads + writes), STREAM convention."""
+    passes = {"copy": 2, "scale": 2, "add": 3, "triad": 3}[op]
+    return passes * n_elems * itemsize

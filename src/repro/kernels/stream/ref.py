@@ -1,0 +1,23 @@
+"""Pure-jnp oracles for the STREAM microkernels (DAMOV Class 1a)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["copy_ref", "scale_ref", "add_ref", "triad_ref"]
+
+
+def copy_ref(a):
+    return a + 0  # forces a materialized copy
+
+
+def scale_ref(a, q):
+    return q * a
+
+
+def add_ref(a, b):
+    return a + b
+
+
+def triad_ref(a, b, q):
+    return a + q * b

@@ -1,0 +1,19 @@
+"""Jitted entry point for the token-gather kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import gather_rows
+from .ref import gather_rows_ref
+
+__all__ = ["gather_rows", "gather_rows_ref", "gather"]
+
+
+def gather(table, idx, *, interpret: bool | None = None):
+    on_tpu = jax.devices()[0].platform == "tpu"
+    if interpret is None:
+        interpret = not on_tpu
+    if (on_tpu or interpret) and table.shape[-1] % 128 == 0:
+        return gather_rows(table, idx, interpret=interpret)
+    return gather_rows_ref(table, idx)

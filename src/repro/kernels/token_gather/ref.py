@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the token-gather kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["gather_rows_ref"]
+
+
+def gather_rows_ref(table, idx):
+    """table: [N, D]; idx: [M] int32 -> [M, D]."""
+    return jnp.take(table, idx, axis=0)

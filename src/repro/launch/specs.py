@@ -1,0 +1,142 @@
+"""Lowerable step builders + ShapeDtypeStruct input specs per cell.
+
+Everything here is shape-only: no parameter or cache is ever allocated
+(``jax.eval_shape`` over the real init functions), which is what lets the
+340B config lower on a CPU host.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from ..models.model import LM
+from ..models.sharding import (DEFAULT_RULES, INFER_RULES, logical_to_spec,
+                               tree_shardings)
+from ..train import AdamWConfig, build_train_step, init_train_state, train_state_axes
+from .cells import CellPlan
+
+__all__ = ["build_cell", "input_specs"]
+
+
+def _batch_sharding(mesh, shape, logical, rules=None):
+    return NamedSharding(mesh, logical_to_spec(mesh, logical, shape, rules))
+
+
+def input_specs(plan: CellPlan, lm: LM) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg, shape = plan.cfg, plan.shape
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+
+    if plan.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        if cfg.family == "vlm":
+            specs["extra_embed"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_img_tokens, cfg.d_model), dt)
+        if cfg.family == "audio":
+            specs["extra_embed"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_ctx, cfg.d_model), dt)
+        return specs
+
+    if plan.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.family == "vlm":
+            specs["extra_embed"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_img_tokens, cfg.d_model), dt)
+        if cfg.family == "audio":
+            specs["extra_embed"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_ctx, cfg.d_model), dt)
+        return specs
+
+    # decode: one new token against a KV cache of seq_len
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((b,), jnp.int32),
+    }
+
+
+def rules_for(kind: str, override: dict | None = None) -> dict:
+    base = DEFAULT_RULES if kind == "train" else INFER_RULES
+    return dict(base, **override) if override else base
+
+
+def build_cell(plan: CellPlan, mesh, *, opt_cfg: AdamWConfig | None = None,
+               rules: dict | None = None):
+    """Return (fn, arg_shapes, in_shardings, donate, rules) for one cell,
+    ready for ``jax.jit(...).lower(*arg_shapes)`` under
+    ``sharding.activate(mesh, rules)``."""
+    cfg = plan.cfg
+    lm = LM(cfg)
+    key = jax.random.PRNGKey(0)
+    rules = rules_for(plan.kind, rules or dict(plan.rules_override))
+
+    param_shapes = jax.eval_shape(lm.init, key)
+    if plan.kind != "train":
+        # serving loads bf16 weights (half the HBM and gather bytes)
+        dt = jnp.dtype(cfg.dtype)
+        param_shapes = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, dt if s.dtype == jnp.float32 else s.dtype),
+            param_shapes)
+    param_sh = tree_shardings(mesh, param_shapes, lm.axes(), rules)
+    specs = input_specs(plan, lm)
+
+    if plan.kind == "train":
+        opt_cfg = opt_cfg or AdamWConfig()
+        opt_shapes = jax.eval_shape(
+            lambda p: init_train_state(lm, p, opt_cfg), param_shapes)
+        opt_sh = tree_shardings(mesh, opt_shapes,
+                                train_state_axes(lm.axes()), rules)
+        batch_sh = {
+            k: _batch_sharding(mesh, v.shape,
+                               ("batch",) + (None,) * (len(v.shape) - 1),
+                               rules)
+            for k, v in specs.items()
+        }
+        fn = build_train_step(lm, opt_cfg, microbatches=plan.microbatches)
+        args = (param_shapes, opt_shapes, specs)
+        shardings = (param_sh, opt_sh, batch_sh)
+        return fn, args, shardings, (0, 1), rules
+
+    if plan.kind == "prefill":
+        b, s = plan.shape.global_batch, plan.shape.seq_len
+        # VLM prefill caches image-prefix positions too
+        extra = cfg.n_img_tokens if cfg.family == "vlm" else 0
+        cache_shapes = jax.eval_shape(partial(lm.init_cache, b, s + extra + 1))
+        cache_sh = tree_shardings(mesh, cache_shapes, lm.cache_axes(), rules)
+        batch_sh = {
+            k: _batch_sharding(mesh, v.shape,
+                               ("batch",) + (None,) * (len(v.shape) - 1),
+                               rules)
+            for k, v in specs.items()
+        }
+
+        def fn(params, batch, cache):
+            return lm.prefill(params, batch["tokens"], cache,
+                              extra_embed=batch.get("extra_embed"))
+
+        args = (param_shapes, specs, cache_shapes)
+        shardings = (param_sh, batch_sh, cache_sh)
+        return fn, args, shardings, (2,), rules
+
+    # decode
+    b, s = plan.shape.global_batch, plan.shape.seq_len
+    cache_shapes = jax.eval_shape(partial(lm.init_cache, b, s))
+    cache_sh = tree_shardings(mesh, cache_shapes, lm.cache_axes(), rules)
+    tok_sh = _batch_sharding(mesh, (b, 1), ("batch", None), rules)
+    pos_sh = _batch_sharding(mesh, (b,), ("batch",), rules)
+
+    def fn(params, tokens, cache, pos):
+        return lm.decode_step(params, tokens, cache, pos)
+
+    args = (param_shapes, specs["tokens"], cache_shapes, specs["pos"])
+    shardings = (param_sh, tok_sh, cache_sh, pos_sh)
+    return fn, args, shardings, (2,), rules

@@ -1,0 +1,8 @@
+"""Model zoo: configs, layers and the unified LM assembly."""
+
+from .config import ModelConfig, SHAPES, ShapeSpec  # noqa: F401
+from .model import LM  # noqa: F401
+from . import layers, moe, sharding, ssm  # noqa: F401
+
+__all__ = ["ModelConfig", "SHAPES", "ShapeSpec", "LM",
+           "layers", "moe", "sharding", "ssm"]

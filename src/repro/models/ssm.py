@@ -1,0 +1,260 @@
+"""Mamba2 / SSD (state-space duality) blocks in JAX.
+
+Chunked SSD algorithm (Dao & Gu 2024): within-chunk quadratic attention-like
+form + across-chunk linear recurrence, all matmul-shaped so the MXU eats it.
+Single-token decode maintains the O(1) recurrent state, which is what makes
+``long_500k`` tractable for the SSM/hybrid architectures.
+
+Layout: heads ``h = d_inner / head_dim``, state size ``n``; B/C are shared
+across heads (ngroups = 1, as in Mamba2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Params, _dtype, _init, rms_norm
+
+__all__ = [
+    "ssm_init", "ssm_axes", "ssm_fwd", "ssm_decode", "ssd_chunked", "ssd_ref",
+]
+
+
+def ssm_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.n_ssm_heads
+    ks = jax.random.split(key, 6)
+    conv_ch = di + 2 * n
+    return {
+        # fused in-projection: [z, x, B, C, dt]
+        "w_in": _init(ks[0], (d, 2 * di + 2 * n + h), d ** -0.5),
+        "conv_w": _init(ks[1], (cfg.ssm_conv, conv_ch), 0.5),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)
+        ),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": jnp.ones((di,), jnp.float32),
+        "w_out": _init(ks[2], (di, d), di ** -0.5),
+    }
+
+
+def ssm_axes(cfg: ModelConfig) -> Params:
+    return {
+        "w_in": ("fsdp", "ssm_inner"),
+        "conv_w": ("conv", None),
+        "conv_b": (None,),
+        "dt_bias": ("ssm_heads",),
+        "a_log": ("ssm_heads",),
+        "d_skip": ("ssm_heads",),
+        "norm": ("ssm_inner",),
+        "w_out": ("ssm_inner", "fsdp"),
+    }
+
+
+def _split_in(cfg: ModelConfig, proj):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di: di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n:]
+    assert dt.shape[-1] == h
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """xbc: [B, S, C]; w: [K, C] depthwise causal conv."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i: i + xbc.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return out + b[None, None, :]
+
+
+def ssd_ref(x, dt, a, b, c, d_skip):
+    """Naive O(S^2) SSD oracle (used by tests to validate the chunked path).
+
+    x: [B,S,H,P]; dt: [B,S,H]; a: [H] (negative); b,c: [B,S,N]; d_skip: [H].
+    y[i] = sum_{j<=i} c_i . b_j * exp(sum_{j<m<=i} dt_m a) * dt_j * x_j
+    """
+    dtf = dt.astype(jnp.float32)
+    da = dtf * a[None, None, :]                       # [B,S,H]
+    cs = jnp.cumsum(da, axis=1)
+    seg = cs[:, :, None, :] - cs[:, None, :, :]       # [B,i,j,H]
+    s = x.shape[1]
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    # Mask *before* exp: upper-triangle segments are positive and overflow,
+    # poisoning gradients through where().
+    seg = jnp.where(mask[None, :, :, None], seg, -jnp.inf)
+    decay = jnp.exp(seg)
+    cb = jnp.einsum("bin,bjn->bij", c.astype(jnp.float32), b.astype(jnp.float32))
+    w = cb[:, :, :, None] * decay * dtf[:, None, :, :]
+    y = jnp.einsum("bijh,bjhp->bihp", w, x.astype(jnp.float32))
+    y = y + x.astype(jnp.float32) * d_skip[None, None, :, None]
+    return y.astype(x.dtype)
+
+
+def ssd_chunked(x, dt, a, b, c, d_skip, chunk: int, *,
+                return_final_state: bool = False):
+    """Chunked SSD: [B,S,H,P] -> [B,S,H,P]; numerically matches ``ssd_ref``.
+
+    ``return_final_state``: also return the terminal recurrent state
+    [B, H, N, P] (prefill -> decode handoff)."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    # pad to a multiple of q
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // q
+
+    xc = x.reshape(bsz, nc, q, h, p).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, q, h).astype(jnp.float32)
+    bc = b.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cc = c.reshape(bsz, nc, q, n).astype(jnp.float32)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+
+    # One scan over chunks carrying the running state; the body is
+    # rematerialized so autodiff never stacks the [B, Q, Q, H] intra-chunk
+    # decay tensors across chunks (§Perf iteration 1 — same pathology as
+    # the attention kv-chunk scan).
+    @jax.checkpoint
+    def chunk_body(r, inp):
+        xq, dtq, bq, cq = inp                            # [B,Q,...]
+        da = dtq * a[None, None, :]                      # [B,Q,H]
+        cs = jnp.cumsum(da, axis=1)                      # inclusive
+        total = cs[:, -1, :]                             # [B,H]
+
+        # intra-chunk (diagonal block)
+        seg = cs[:, :, None, :] - cs[:, None, :, :]      # [B,i,j,H]
+        seg = jnp.where(mask[None, :, :, None], seg, -jnp.inf)
+        decay = jnp.exp(seg)
+        cb = jnp.einsum("bin,bjn->bij", cq, bq)
+        w = cb[..., None] * decay * dtq[:, None, :, :]
+        y_diag = jnp.einsum("bijh,bjhp->bihp", w, xq)
+
+        # off-diagonal: contribution of the incoming state
+        y_off = jnp.einsum("bqn,bqh,bhnp->bqhp", cq, jnp.exp(cs), r)
+
+        # chunk terminal state
+        decay_state = jnp.exp(total[:, None, :] - cs)    # [B,Q,H]
+        sc = jnp.einsum("bqh,bqn,bqhp->bhnp", decay_state * dtq, bq, xq)
+        r_new = r * jnp.exp(total)[:, :, None, None] + sc
+        return r_new, y_diag + y_off
+
+    from .sharding import constrain
+
+    r0 = constrain(jnp.zeros((bsz, h, n, p), jnp.float32),
+                   "batch", "ssm_heads", None, None)
+    r_final, yc = jax.lax.scan(
+        chunk_body, r0,
+        (constrain(xc.transpose(1, 0, 2, 3, 4),
+                   None, "batch", None, "ssm_heads", None),
+         constrain(dtc.transpose(1, 0, 2, 3), None, "batch", None, "ssm_heads"),
+         constrain(bc.transpose(1, 0, 2, 3), None, "batch", None, None),
+         constrain(cc.transpose(1, 0, 2, 3), None, "batch", None, None)),
+    )
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(bsz, nc * q, h, p)
+    y = y[:, : s]
+    y = y + x[:, :s].astype(jnp.float32) * d_skip[None, None, :, None]
+    if return_final_state:
+        return y.astype(x.dtype), r_final
+    return y.astype(x.dtype)
+
+
+def ssm_fwd(p: Params, cfg: ModelConfig, x, *, return_state: bool = False,
+            prompt_len=None):
+    """Full-sequence Mamba2 block. x: [B, S, d] -> [B, S, d].
+
+    ``return_state``: also return the decode cache {"state", "conv"} at the
+    end of the sequence (prefill handoff).
+    ``prompt_len``: [B] valid lengths; positions >= prompt_len are padding
+    (dt forced to 0 so they leave the recurrent state untouched, and the
+    conv tail is sliced at the true end of prompt).
+    """
+    dt_ = _dtype(cfg)
+    di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    proj = x @ p["w_in"].astype(dt_)
+    z, xbc_raw, dtr = _split_in(cfg, proj)
+    xbc = _causal_conv(xbc_raw, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_))
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :di]
+    b = xbc[..., di: di + n]
+    c = xbc[..., di + n:]
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])
+    bsz, s, _ = x.shape
+    if prompt_len is not None:
+        valid = (jnp.arange(s)[None, :] < prompt_len[:, None])
+        dt = dt * valid[..., None].astype(dt.dtype)
+    a = -jnp.exp(p["a_log"])
+
+    xh = xs.reshape(bsz, s, h, hd)
+    out = ssd_chunked(xh, dt, a, b, c, p["d_skip"], cfg.ssm_chunk,
+                      return_final_state=return_state)
+    y, final_state = out if return_state else (out, None)
+    y = y.reshape(bsz, s, di)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, {"scale": p["norm"]}, cfg.norm_eps)
+    y = y @ p["w_out"].astype(dt_)
+    if return_state:
+        k = cfg.ssm_conv - 1
+        if prompt_len is None:
+            conv_tail = xbc_raw[:, s - k:, :] if s >= k else jnp.pad(
+                xbc_raw, ((0, 0), (k - s, 0), (0, 0)))
+        else:
+            start = jnp.maximum(prompt_len - k, 0)
+            conv_tail = jax.vmap(
+                lambda row, st: jax.lax.dynamic_slice(
+                    row, (st, 0), (k, row.shape[1]))
+            )(xbc_raw, start)
+        return y, {"state": final_state, "conv": conv_tail}
+    return y
+
+
+def ssm_decode(p: Params, cfg: ModelConfig, x, cache: dict) -> tuple:
+    """Single-token decode.  x: [B, 1, d].
+
+    cache: {"state": [B,H,N,P] f32, "conv": [B, K-1, C]}.
+    """
+    dt_ = _dtype(cfg)
+    di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    proj = x @ p["w_in"].astype(dt_)
+    z, xbc, dtr = _split_in(cfg, proj)
+
+    # conv over [cached K-1 inputs | current]
+    conv_in = jnp.concatenate([cache["conv"], xbc], axis=1)  # [B, K, C]
+    w = p["conv_w"].astype(dt_)
+    out = jnp.einsum("bkc,kc->bc", conv_in, w) + p["conv_b"].astype(dt_)
+    xbc_t = jax.nn.silu(out)[:, None, :]
+    new_conv = conv_in[:, 1:, :]
+
+    xs = xbc_t[..., :di]
+    b = xbc_t[..., di: di + n]
+    c = xbc_t[..., di + n:]
+    dt = jax.nn.softplus(dtr[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    a = -jnp.exp(p["a_log"])
+
+    bsz = x.shape[0]
+    xh = xs.reshape(bsz, h, hd).astype(jnp.float32)
+    bf = b[:, 0].astype(jnp.float32)
+    cf = c[:, 0].astype(jnp.float32)
+
+    decay = jnp.exp(dt * a[None, :])                         # [B,H]
+    state = cache["state"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, bf, xh
+    )
+    y = jnp.einsum("bn,bhnp->bhp", cf, state)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, di).astype(dt_)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, {"scale": p["norm"]}, cfg.norm_eps)
+    return y @ p["w_out"].astype(dt_), {"state": state, "conv": new_conv}

@@ -1,0 +1,3 @@
+"""Serving substrate."""
+
+from .engine import Engine, Request  # noqa: F401

@@ -1,0 +1,154 @@
+"""Batched serving engine: prefill + slot-based continuous decode.
+
+A fixed pool of ``max_batch`` slots shares one preallocated KV/state cache.
+Requests are prefilled one at a time into a free slot (single compiled
+prefill per prompt length bucket), then all active slots advance together
+through a single compiled ``decode_step``.  Finished slots (EOS or token
+budget) are freed and refilled from the queue — continuous batching.
+
+The engine is deliberately functional about model state: the cache is a
+pytree of arrays and slot management happens host-side, so the same engine
+drives CPU smoke tests and the sharded multi-chip lowering (the dry-run
+lowers the same ``decode_step``).
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import LM
+
+__all__ = ["Request", "Engine"]
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [S] token ids
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+    out_tokens: list[int] = field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        if self.eos_id is not None and self.out_tokens and \
+                self.out_tokens[-1] == self.eos_id:
+            return True
+        return len(self.out_tokens) >= self.max_new_tokens
+
+
+class Engine:
+    def __init__(self, lm: LM, params, *, max_batch: int, max_len: int,
+                 prompt_buckets: tuple[int, ...] = (32, 128, 512)):
+        self.lm = lm
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.buckets = tuple(sorted(prompt_buckets))
+        self.cache = lm.init_cache(max_batch, max_len)
+        self.pos = jnp.zeros((max_batch,), jnp.int32)
+        self.cur_tokens = jnp.zeros((max_batch, 1), jnp.int32)
+        self.active: dict[int, Request] = {}     # slot -> request
+        self.queue: deque[Request] = deque()
+        self._free = list(range(max_batch))
+
+        self._decode = jax.jit(lm.decode_step)
+        # Single-slot prefill, one compile per bucket: (params, tokens[1,S],
+        # cache_slice) -> (logits, cache_slice, pos)
+        self._prefills = {}
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _bucket(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.buckets[-1]
+
+    def _batch_axis_tree(self):
+        """Per-leaf index of the batch axis, from the cache's logical axes."""
+        axes = self.lm.cache_axes()
+
+        def find(a):
+            return a.index("batch")
+
+        return jax.tree.map(
+            find, axes,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+
+    def _slot_cache(self, slot: int):
+        def take(x, ax):
+            idx = [slice(None)] * x.ndim
+            idx[ax] = slice(slot, slot + 1)
+            return x[tuple(idx)]
+
+        return jax.tree.map(take, self.cache, self._batch_axis_tree())
+
+    def _write_slot(self, slot: int, new_slot_cache) -> None:
+        def put(buf, new, ax):
+            idx = [slice(None)] * buf.ndim
+            idx[ax] = slice(slot, slot + 1)
+            return buf.at[tuple(idx)].set(new.astype(buf.dtype))
+
+        self.cache = jax.tree.map(put, self.cache, new_slot_cache,
+                                  self._batch_axis_tree())
+
+    def _admit(self) -> None:
+        while self._free and self.queue:
+            req = self.queue.popleft()
+            slot = self._free.pop()
+            n = len(req.prompt)
+            b = self._bucket(n)
+            padded = np.zeros((1, b), np.int32)
+            padded[0, :n] = req.prompt  # right-pad; prompt_len masks the rest
+            if b not in self._prefills:
+                self._prefills[b] = jax.jit(
+                    lambda p, t, c, pl: self.lm.prefill(p, t, c, prompt_len=pl))
+            logits, new_c, next_pos = self._prefills[b](
+                self.params, jnp.asarray(padded), self._slot_cache(slot),
+                jnp.asarray([n], jnp.int32))
+            self._write_slot(slot, new_c)
+            tok = int(jnp.argmax(logits[0, -1]))
+            req.out_tokens.append(tok)
+            self.pos = self.pos.at[slot].set(int(next_pos[0]))
+            self.cur_tokens = self.cur_tokens.at[slot, 0].set(tok)
+            self.active[slot] = req
+
+    # ------------------------------------------------------------------
+    def step(self) -> list[tuple[int, int]]:
+        """Admit queued requests, run one decode step, return
+        [(request_id, emitted_token)] for active slots."""
+        self._admit()
+        if not self.active:
+            return []
+        logits, self.cache = self._decode(
+            self.params, self.cur_tokens, self.cache, self.pos)
+        next_tokens = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+        self.pos = self.pos + 1
+        self.cur_tokens = next_tokens[:, None]
+
+        emitted = []
+        for slot in list(self.active):
+            req = self.active[slot]
+            tok = int(next_tokens[slot])
+            req.out_tokens.append(tok)
+            emitted.append((req.rid, tok))
+            if req.done or int(self.pos[slot]) >= self.max_len - 1:
+                del self.active[slot]
+                self._free.append(slot)
+        return emitted
+
+    def run(self, requests: list[Request]) -> dict[int, list[int]]:
+        for r in requests:
+            self.submit(r)
+        while self.queue or self.active:
+            self.step()
+        return {r.rid: r.out_tokens for r in requests}

@@ -1,0 +1,10 @@
+"""Training substrate: optimizer, gradient compression, step builder."""
+
+from . import compress, optimizer, step  # noqa: F401
+from .optimizer import AdamWConfig  # noqa: F401
+from .step import (  # noqa: F401
+    build_eval_step,
+    build_train_step,
+    init_train_state,
+    train_state_axes,
+)

