@@ -4,6 +4,10 @@ Usage::
 
     PYTHONPATH=src python -m benchmarks.run [--fast] [--only SECTION]
 
+All figure sections are queries over ONE shared :class:`repro.study.Study`:
+the memoized engine simulates each (workload, cores, config) cell exactly
+once and every section reuses it, so the full run is one simulation pass.
+
 Sections map 1:1 to paper artifacts:
 
 - fig1   — roofline + MPKI vs NDP speedup (Fig. 1)
@@ -23,15 +27,22 @@ import argparse
 import sys
 import time
 
+from repro.study import Study, StudyResult
+
 from . import kernel_bench, paper_figures, roofline_table
 
 
-def emit(section: str, rows, header) -> None:
+def emit(section: str, result) -> list[tuple]:
+    if isinstance(result, StudyResult):
+        rows, header = result.to_rows(), result.columns
+    else:
+        rows, header = result
     print(f"\n## {section}")
     print(",".join(str(h) for h in header))
     for r in rows:
         print(",".join(str(x) for x in r))
     sys.stdout.flush()
+    return rows
 
 
 def main() -> None:
@@ -42,20 +53,20 @@ def main() -> None:
     args = ap.parse_args()
 
     refs = 20_000 if args.fast else 60_000
-    suite = paper_figures._suite(refs)
+    study = Study(refs=refs)
 
     sections = {
-        "fig1": lambda: paper_figures.fig1_roofline_mpki(suite),
-        "fig3": lambda: paper_figures.fig3_locality_clustering(suite),
-        "fig4": lambda: paper_figures.fig4_lfmr_mpki(suite),
-        "fig5": lambda: paper_figures.fig5_scalability(suite),
-        "fig5_nuca": lambda: paper_figures.fig5_scalability(suite, nuca=True),
-        "fig7": lambda: paper_figures.fig7_energy(suite),
-        "fig18": paper_figures.fig18_summary_and_validation,
-        "case1": lambda: paper_figures.case1_noc(suite),
-        "case2": lambda: paper_figures.case2_accelerators(suite),
-        "case3": lambda: paper_figures.case3_core_models(suite),
-        "case4": lambda: paper_figures.case4_offload(suite),
+        "fig1": lambda: paper_figures.fig1_roofline_mpki(study),
+        "fig3": lambda: paper_figures.fig3_locality_clustering(study),
+        "fig4": lambda: paper_figures.fig4_lfmr_mpki(study),
+        "fig5": lambda: paper_figures.fig5_scalability(study),
+        "fig5_nuca": lambda: paper_figures.fig5_scalability(study, nuca=True),
+        "fig7": lambda: paper_figures.fig7_energy(study),
+        "fig18": lambda: paper_figures.fig18_summary_and_validation(study),
+        "case1": lambda: paper_figures.case1_noc(study),
+        "case2": lambda: paper_figures.case2_accelerators(study),
+        "case3": lambda: paper_figures.case3_core_models(study),
+        "case4": lambda: paper_figures.case4_offload(study),
         "roofline": roofline_table.rows,
         "kernels_stream": kernel_bench.stream_rows,
         "kernels_attention": kernel_bench.attention_rows,
@@ -67,9 +78,14 @@ def main() -> None:
         if args.only and args.only != name:
             continue
         t0 = time.time()
-        rows, header = fn()
-        emit(name, rows, header)
+        result = fn()
+        rows = emit(name, result)
         print(f"# {name}: {len(rows)} rows in {time.time() - t0:.1f}s")
+
+    s = study.stats
+    print(f"# engine: {study.engine.cells} cells, "
+          f"{s.sim_runs} simulated, {s.sim_hits} cache hits "
+          f"({s.sim_hit_rate:.0%} hit rate)")
 
 
 if __name__ == "__main__":

@@ -1,18 +1,21 @@
 """Quickstart: the DAMOV methodology end-to-end on a new 'application'.
 
 Characterizes a workload the classifier has never seen (a blocked
-matrix-transpose access pattern), walks it through Steps 1-3, prints its
-bottleneck class + the Host/Host+PF/NDP scalability verdict, then shows the
-TPU-side analogue: the roofline class of an LM training step.
+matrix-transpose access pattern) through the unified ``repro.study`` API:
+one :class:`~repro.study.Study` holds the workload, its memoized engine
+runs each simulation cell once, and metrics / classification / scalability
+are cached queries over it.  Then shows the TPU-side analogue: the same
+Step-3 question answered by the ``hlo`` substrate for an LM training step.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.core import analytic, classify, hlo_analysis, scalability, tracegen
 from repro import configs
+from repro.core import analytic, hlo_analysis, tracegen
 from repro.models.config import SHAPES
+from repro.study import Study
 
 
 def make_transpose_workload(n: int = 1024) -> tracegen.Workload:
@@ -34,24 +37,30 @@ def make_transpose_workload(n: int = 1024) -> tracegen.Workload:
 
 
 def main():
-    print("=== DAMOV Steps 1-3 on a new workload ===")
+    print("=== DAMOV Steps 1-3 on a new workload (repro.study API) ===")
     w = make_transpose_workload()
-    m = classify.measure(w)
-    cls = classify.classify(m)
+    study = Study(suite=[w])
+
+    spatial, temporal = study.locality(w)
+    m = study.metrics(w)
+    cls = study.classify(w)
     print(f"workload={w.name}")
-    print(f"  Step 2 (arch-independent): temporal={m.temporal:.2f} "
-          f"spatial={m.spatial:.2f}")
+    print(f"  Step 2 (arch-independent): temporal={temporal:.2f} "
+          f"spatial={spatial:.2f}")
     print(f"  Step 3 (arch-dependent):   AI={m.ai:.1f} MPKI={m.mpki:.1f} "
           f"LFMR={[round(x, 2) for x in m.lfmr_by_cores]}")
     print(f"  -> bottleneck class {cls} "
           f"({'DRAM bandwidth-bound' if cls == '1a' else cls})")
 
-    r = scalability.analyze(w)
+    r = study.scalability(w)
     sp = r.speedup_ndp_vs_host()
     print(f"  NDP speedup across 1..256 cores: "
           f"{[round(s, 2) for s in sp]}")
     verdict = "NDP-friendly" if np.mean(sp) > 1.1 else "cache-friendly"
-    print(f"  verdict: {verdict}\n")
+    print(f"  verdict: {verdict}")
+    s = study.stats
+    print(f"  engine: {study.engine.cells} cells simulated once, "
+          f"{s.sim_hits} recalled from cache\n")
 
     print("=== TPU analogue: classify an LM training step ===")
     cfg = configs.get("deepseek-moe-16b")
@@ -68,7 +77,7 @@ def main():
           f"t_memory={s['t_memory_s']:.3e}s  "
           f"t_collective={s['t_collective_s']:.3e}s")
     print(f"  -> class={s['class']}  mfu_bound={s['mfu_bound']:.3f}")
-    print("  (the same Step-3 logic, re-based onto the compiled artifact)")
+    print("  (the hlo substrate: python -m repro.study --substrate hlo)")
 
 
 if __name__ == "__main__":

@@ -5,11 +5,16 @@ Submodules:
 - ``locality``     — architecture-independent spatial/temporal metrics (Step 2)
 - ``cachesim``     — trace-driven hierarchy simulator (Step 3 substrate)
 - ``tracegen``     — synthetic DAMOV workload families
+- ``sweep``        — the shared Step-3 core sweep (single source of truth)
 - ``scalability``  — Host / Host+PF / NDP core-sweep timing + energy model
 - ``energy``       — Table 1 energy constants
 - ``classify``     — six-class bottleneck classifier + §3.5 validation
 - ``casestudies``  — §5 case studies (NoC, accelerators, core models, BB offload)
 - ``hlo_analysis`` — Step 3 re-based onto compiled XLA artifacts (TPU)
+
+These modules work standalone; ``repro.study`` composes them into the
+unified characterization API (one memoized engine shared by every
+consumer) — prefer it for anything that touches more than one module.
 """
 
 from . import (  # noqa: F401
@@ -21,6 +26,7 @@ from . import (  # noqa: F401
     hlo_analysis,
     locality,
     scalability,
+    sweep,
     tracegen,
 )
 
@@ -33,5 +39,6 @@ __all__ = [
     "hlo_analysis",
     "locality",
     "scalability",
+    "sweep",
     "tracegen",
 ]

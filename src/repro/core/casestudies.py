@@ -23,8 +23,15 @@ from dataclasses import dataclass
 import numpy as np
 
 from . import scalability
-from .cachesim import WORDS_PER_LINE, ndp_config, simulate
+from .cachesim import WORDS_PER_LINE, ndp_config
 from .tracegen import Workload
+
+
+def _engine_or_new(engine):
+    if engine is None:
+        from repro.study.engine import SimEngine  # lazy: core stays a leaf
+        engine = SimEngine()
+    return engine
 
 __all__ = [
     "noc_study",
@@ -61,13 +68,10 @@ class NocResult:
 
 
 def noc_study(workload: Workload, *, cores: int = 32, seed: int = 0,
-              cycles_per_hop: float = 3.0) -> NocResult:
-    spec = workload.trace(cores, seed=seed)
-    sim = simulate(
-        spec.addresses, ndp_config(cores),
-        ai_ops_per_access=workload.ai_ops_per_access,
-        instr_per_access=workload.instr_per_access,
-    )
+              cycles_per_hop: float = 3.0, engine=None) -> NocResult:
+    engine = _engine_or_new(engine)
+    spec = engine.trace(workload, cores, seed=seed)
+    sim = engine.simulate(workload, cores, ndp_config(cores), seed=seed)
     lines = np.asarray(spec.addresses, dtype=np.int64) // WORDS_PER_LINE
     # The NDP core is statically mapped to one vault; every L1 miss targets
     # the vault that owns its line.
@@ -99,19 +103,17 @@ def noc_study(workload: Workload, *, cores: int = 32, seed: int = 0,
 # --------------------------------------------------------------------------
 # Case study 2: NDP accelerators.
 # --------------------------------------------------------------------------
-def accelerator_study(workload: Workload, *, seed: int = 0) -> float:
+def accelerator_study(workload: Workload, *, seed: int = 0,
+                      engine=None) -> float:
     """Speedup of an NDP-placed accelerator over the compute-centric one.
 
     Aladdin-style bound model: the accelerator datapath is identical; only
     the memory interface differs (internal vs off-chip bandwidth and
     latency).  Returns NDP-accel / CC-accel speedup.
     """
-    spec = workload.trace(1, seed=seed)
-    sim = simulate(
-        spec.addresses, ndp_config(1),
-        ai_ops_per_access=workload.ai_ops_per_access,
-        instr_per_access=workload.instr_per_access,
-    )
+    engine = _engine_or_new(engine)
+    spec = engine.trace(workload, 1, seed=seed)
+    sim = engine.simulate(workload, 1, ndp_config(1), seed=seed)
     flops = workload.ai_ops_per_access * sim.accesses
     accel_flops_per_cycle = 16.0
     t_compute = flops / accel_flops_per_cycle
@@ -134,13 +136,16 @@ def accelerator_study(workload: Workload, *, seed: int = 0) -> float:
 # --------------------------------------------------------------------------
 # Case study 3: iso-area/iso-power core models.
 # --------------------------------------------------------------------------
-def core_model_study(workload: Workload, *, seed: int = 0) -> dict[str, float]:
+def core_model_study(workload: Workload, *, seed: int = 0,
+                     engine=None) -> dict[str, float]:
     """Speedups of NDP+in-order (128 cores) and NDP+OoO (6 cores) over a
     4-core OoO host (the paper's iso-area/power budgets)."""
+    engine = _engine_or_new(engine)
 
     def perf(cfg: str, cores: int, core_model: str) -> float:
         r = scalability.analyze(
-            workload, core_model=core_model, cores=(cores,), seed=seed
+            workload, core_model=core_model, cores=(cores,), seed=seed,
+            engine=engine,
         )
         return r.points[cfg][0].perf
 
@@ -158,7 +163,7 @@ def core_model_study(workload: Workload, *, seed: int = 0) -> dict[str, float]:
 # --------------------------------------------------------------------------
 def finegrained_offload_study(
     workload: Workload, *, n_blocks: int = 100, zipf_s: float = 1.6,
-    seed: int = 0,
+    seed: int = 0, engine=None,
 ) -> dict[str, float]:
     """Speedup of offloading (a) the hottest basic block vs (b) the whole
     function, over host execution.
@@ -173,7 +178,8 @@ def finegrained_offload_study(
     weights /= weights.sum()
     hottest_share = float(weights[0])
 
-    r = scalability.analyze(workload, cores=(4,), seed=seed)
+    r = scalability.analyze(workload, cores=(4,), seed=seed,
+                            engine=_engine_or_new(engine))
     t_host = 1.0 / r.points["host"][0].perf
     t_ndp = 1.0 / r.points["ndp"][0].perf
     full_speedup = t_host / t_ndp

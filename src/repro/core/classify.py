@@ -26,6 +26,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from . import cachesim, locality
+from .sweep import CORE_SWEEP
 from .tracegen import Workload
 
 __all__ = [
@@ -37,11 +38,10 @@ __all__ = [
     "derive_thresholds",
     "validate",
     "CLASSES",
+    "CORE_SWEEP",  # re-exported from repro.core.sweep
 ]
 
 CLASSES = ("1a", "1b", "1c", "2a", "2b", "2c")
-
-CORE_SWEEP = (1, 4, 16, 64, 256)
 
 
 @dataclass(frozen=True)
@@ -82,26 +82,28 @@ class FunctionMetrics:
 
 
 def measure(workload: Workload, *, seed: int = 0,
-            cores: tuple[int, ...] = CORE_SWEEP) -> FunctionMetrics:
-    """Steps 2+3 metric collection for one workload (host config)."""
-    spec1 = workload.trace(1, seed=seed)
+            cores: tuple[int, ...] = CORE_SWEEP,
+            engine=None) -> FunctionMetrics:
+    """Steps 2+3 metric collection for one workload (host config).
+
+    ``engine``: a :class:`repro.study.SimEngine` whose memoized cells are
+    shared with other consumers (scalability, energy, case studies).  When
+    omitted a private engine is used, preserving the standalone behaviour.
+    """
+    if engine is None:
+        from repro.study.engine import SimEngine  # lazy: core stays a leaf
+        engine = SimEngine()
+    spec1 = engine.trace(workload, 1, seed=seed)
     temporal = locality.temporal_locality(spec1.addresses)
     spatial = locality.spatial_locality(spec1.addresses)
 
-    lfmrs = []
-    mpki4 = 0.0
-    for c in cores:
-        spec = workload.trace(c, seed=seed)
-        sim = cachesim.simulate(
-            spec.addresses,
-            cachesim.host_config(c),
-            ai_ops_per_access=workload.ai_ops_per_access,
-            instr_per_access=workload.instr_per_access,
-            l3_factor=spec.l3_factor,
-        )
-        lfmrs.append(sim.lfmr)
-        if c == 4:
-            mpki4 = sim.mpki
+    sims = engine.sweep(workload, cores, cachesim.host_config, seed=seed)
+    lfmrs = [s.lfmr for s in sims]
+    # MPKI baseline is the 4-core host (the paper's Step-1 machine); for a
+    # custom sweep without 4, fall back to the closest core count rather
+    # than a silent 0.0 (which would misclassify every Class-1a function).
+    baseline = min(range(len(sims)), key=lambda i: abs(cores[i] - 4))
+    mpki4 = sims[baseline].mpki
     return FunctionMetrics(
         name=workload.name,
         temporal=temporal,

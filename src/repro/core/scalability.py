@@ -31,11 +31,12 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from . import cachesim, energy
-from .cachesim import HierarchyConfig, SimResult, simulate
+from .cachesim import SimResult
+from .sweep import CORE_SWEEP
 from .tracegen import TraceSpec, Workload
 
 __all__ = [
-    "CORE_SWEEP",
+    "CORE_SWEEP",  # re-exported from repro.core.sweep
     "SystemPoint",
     "ScalabilityResult",
     "analyze",
@@ -44,7 +45,6 @@ __all__ = [
     "NDP_PEAK_GBS",
 ]
 
-CORE_SWEEP = (1, 4, 16, 64, 256)
 CLOCK_HZ = 2.4e9
 
 # Peak DRAM bandwidth envelopes (paper §1: STREAM Copy measured 115 GB/s
@@ -138,9 +138,8 @@ def _amat_and_stalls(
 
 
 def _evaluate(
-    workload: Workload,
+    sim: SimResult,
     spec: TraceSpec,
-    hierarchy: HierarchyConfig,
     cores: int,
     *,
     ndp: bool,
@@ -148,15 +147,7 @@ def _evaluate(
     mlp_cap: float,
     nuca_hops: float = 0.0,
 ) -> SystemPoint:
-    sim = simulate(
-        spec.addresses,
-        hierarchy,
-        ai_ops_per_access=workload.ai_ops_per_access,
-        instr_per_access=workload.instr_per_access,
-        l3_factor=spec.l3_factor,
-        name=hierarchy.name,
-    )
-
+    """Timing/energy model over one already-simulated cell."""
     peak_gbs = NDP_PEAK_GBS if ndp else HOST_PEAK_GBS
     peak_bytes_per_cycle = peak_gbs * 1e9 / CLOCK_HZ
 
@@ -190,7 +181,7 @@ def _evaluate(
     )
     ebd = energy.energy_for(sim, ndp=ndp, nuca_hops=nuca_hops).scaled(cores)
     return SystemPoint(
-        config=hierarchy.name,
+        config=sim.name,
         cores=cores,
         sim=sim,
         thread_cycles=thread_cycles,
@@ -225,8 +216,17 @@ def analyze(
     cores: tuple[int, ...] = CORE_SWEEP,
     nuca: bool = False,
     seed: int = 0,
+    engine=None,
 ) -> ScalabilityResult:
-    """Full Step-3 sweep for one workload."""
+    """Full Step-3 sweep for one workload.
+
+    ``engine``: a :class:`repro.study.SimEngine`; the underlying simulation
+    cells are core-model independent, so a shared engine serves the ``ooo``
+    and ``inorder`` analyses (and ``classify.measure``) from one pass.
+    """
+    if engine is None:
+        from repro.study.engine import SimEngine  # lazy: core stays a leaf
+        engine = SimEngine()
     ipc = OOO_IPC if core_model == "ooo" else INORDER_IPC
     mlp_cap = OOO_MLP_CAP if core_model == "ooo" else INORDER_MLP_CAP
 
@@ -237,18 +237,17 @@ def analyze(
     )
     factories = sweep_configs(nuca=nuca)
     for cfg_name, factory in factories.items():
+        is_ndp = cfg_name == "ndp"
+        sims = engine.sweep(workload, cores, factory, seed=seed)
         pts: list[SystemPoint] = []
-        for c in cores:
-            spec = workload.trace(c, seed=seed)
-            hierarchy = factory(c)
-            is_ndp = cfg_name == "ndp"
+        for c, sim in zip(cores, sims):
+            spec = engine.trace(workload, c, seed=seed)
             nuca_hops = (np.sqrt(c) * 1.5) if (nuca and not is_ndp) else 0.0
             pts.append(
                 _evaluate(
-                    workload, spec, hierarchy, c,
+                    sim, spec, c,
                     ndp=is_ndp, ipc=ipc, mlp_cap=mlp_cap, nuca_hops=nuca_hops,
                 )
             )
-        key = {"host": "host", "host+pf": "host+pf", "ndp": "ndp"}[cfg_name]
-        result.points[key] = pts
+        result.points[cfg_name] = pts
     return result

@@ -1,0 +1,13 @@
+"""Shared Step-3 sweep constants (single source of truth).
+
+The paper's core sweep {1, 4, 16, 64, 256} (§2.4.2) drives both the
+classification metrics (LFMR-vs-cores slope) and the scalability curves.
+``classify`` and ``scalability`` re-export :data:`CORE_SWEEP` for backwards
+compatibility; this module owns it.
+"""
+
+from __future__ import annotations
+
+__all__ = ["CORE_SWEEP"]
+
+CORE_SWEEP: tuple[int, ...] = (1, 4, 16, 64, 256)

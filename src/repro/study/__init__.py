@@ -1,0 +1,48 @@
+"""``repro.study`` — the unified DAMOV characterization API.
+
+The paper's methodology is a pipeline: profile a workload, compute
+architecture-independent locality metrics, sweep core counts across memory
+hierarchies, and classify the data-movement bottleneck.  This package
+exposes that pipeline as one composable object instead of loose functions:
+
+- :class:`Study` — a suite of workloads bound to a shared engine; exposes
+  cached ``locality`` / ``metrics`` / ``classify`` / ``scalability`` queries
+  and canonical columnar tables.
+- :class:`SimEngine` — the content-addressed, memoized simulation engine:
+  each (workload, seed) x cores x hierarchy cell is simulated exactly once
+  per study and shared by every consumer.
+- :class:`StudyResult` — the columnar result table (``to_rows``/``to_dict``/
+  ``to_csv``/``to_json``).
+- :class:`Substrate` protocol with two backends: :class:`TraceSubstrate`
+  (trace-driven cache simulation) and :class:`HloSubstrate` (compiled-XLA
+  roofline terms) — ``--substrate trace|hlo`` on the CLI.
+
+CLI::
+
+    python -m repro.study --substrate trace --refs 20000 \
+        --sections metrics,classify --format csv
+
+See the repository README for the full flag matrix.
+"""
+
+from .engine import CellKey, EngineStats, SimEngine  # noqa: F401
+from .result import StudyResult  # noqa: F401
+from .study import Study  # noqa: F401
+from .substrate import (  # noqa: F401
+    HloSubstrate,
+    Substrate,
+    TraceSubstrate,
+    get_substrate,
+)
+
+__all__ = [
+    "CellKey",
+    "EngineStats",
+    "SimEngine",
+    "StudyResult",
+    "Study",
+    "Substrate",
+    "TraceSubstrate",
+    "HloSubstrate",
+    "get_substrate",
+]

@@ -1,0 +1,131 @@
+"""CLI entry point: ``python -m repro.study``.
+
+Runs a characterization study and emits columnar tables as CSV or JSON.
+
+Examples::
+
+    # classify the synthetic DAMOV suite (fast traces), CSV to stdout
+    python -m repro.study --refs 20000 --sections classify
+
+    # full metric + scalability tables, JSON to a file
+    python -m repro.study --sections metrics,scalability,energy \
+        --format json --out study.json
+
+    # restrict the core sweep / suite, add jittered variants
+    python -m repro.study --cores 1,4,16 --workloads STRCpy,CHAHsti
+
+    # the TPU backend: per-(arch x shape x mesh) roofline classes
+    python -m repro.study --substrate hlo --format csv
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.core.sweep import CORE_SWEEP
+
+from .result import StudyResult
+from .study import Study
+from .substrate import get_substrate
+
+SECTIONS = ("characterize", "metrics", "classify", "scalability", "energy")
+
+
+def _parse_cores(text: str) -> tuple[int, ...]:
+    cores = tuple(int(x) for x in text.split(",") if x)
+    if not cores:
+        raise argparse.ArgumentTypeError("need at least one core count")
+    return cores
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.study",
+        description="Unified DAMOV characterization pipeline",
+    )
+    ap.add_argument("--substrate", choices=("trace", "hlo"), default="trace",
+                    help="trace-driven cache simulation or compiled-XLA "
+                         "roofline backend")
+    ap.add_argument("--refs", type=int, default=60_000,
+                    help="references per synthetic trace (trace substrate)")
+    ap.add_argument("--variants", type=int, default=1,
+                    help="jittered clones per workload family")
+    ap.add_argument("--suite-seed", type=int, default=0,
+                    help="suite-generation (jitter) seed")
+    ap.add_argument("--seed", type=int, default=0, help="trace seed")
+    ap.add_argument("--cores", type=_parse_cores, default=CORE_SWEEP,
+                    metavar="1,4,16,...", help="core sweep")
+    ap.add_argument("--workloads", default=None,
+                    metavar="NAME[,NAME...]",
+                    help="restrict the suite to these workloads")
+    ap.add_argument("--sections", default="characterize",
+                    metavar=",".join(SECTIONS),
+                    help="which tables to emit (trace substrate)")
+    ap.add_argument("--format", choices=("csv", "json"), default="csv")
+    ap.add_argument("--out", default=None,
+                    help="output path (default: stdout)")
+    ap.add_argument("--stats", action="store_true",
+                    help="print engine hit/miss stats to stderr")
+    return ap
+
+
+def _trace_tables(study: Study, sections: list[str]) -> list[StudyResult]:
+    out: list[StudyResult] = []
+    for sec in sections:
+        if sec == "characterize":
+            out.append(get_substrate("trace", study=study).characterize())
+        elif sec == "metrics":
+            out.append(study.metrics_table())
+        elif sec == "classify":
+            out.append(study.classification_table())
+        elif sec == "scalability":
+            out.append(study.scalability_table())
+        elif sec == "energy":
+            out.append(study.energy_table())
+        else:
+            raise SystemExit(
+                f"unknown section {sec!r}; expected one of {SECTIONS}")
+    return out
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+
+    if args.substrate == "hlo":
+        tables = [get_substrate("hlo").characterize()]
+        stats = None
+    else:
+        study = Study(refs=args.refs, variants=args.variants,
+                      suite_seed=args.suite_seed, seed=args.seed,
+                      cores=args.cores)
+        if args.workloads:
+            try:
+                suite = [study.workload(n) for n in args.workloads.split(",")]
+            except KeyError as e:
+                raise SystemExit(f"error: {e.args[0]}")
+            study = Study(suite=suite, seed=args.seed, cores=args.cores,
+                          engine=study.engine)
+        sections = [s for s in args.sections.split(",") if s]
+        tables = _trace_tables(study, sections)
+        stats = study.stats
+
+    if args.format == "json":
+        import json
+        text = json.dumps([t.to_dict() for t in tables], indent=2)
+    else:
+        text = "\n".join(f"## {t.name}\n{t.to_csv()}" for t in tables)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    else:
+        sys.stdout.write(text + "\n")
+
+    if args.stats and stats is not None:
+        print(f"# engine: {stats.as_dict()}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,189 @@
+"""Content-addressed, memoized simulation engine.
+
+The DAMOV pipeline evaluates many *simulation cells* — one functional
+cache-hierarchy simulation per (workload, seed) x cores x hierarchy config.
+The same cells are needed by several consumers (locality metrics,
+classification, scalability curves, energy breakdowns, the §5 case
+studies), and before this engine existed every consumer re-ran them from
+scratch.
+
+:class:`SimEngine` runs each cell exactly once and shares the result:
+
+- traces are memoized on ``(workload.name, cores, seed)``;
+- simulations are memoized on ``(workload.name, seed, cores, hierarchy)``,
+  where the hierarchy is the frozen :class:`~repro.core.cachesim.HierarchyConfig`
+  itself (content, not identity — two structurally equal configs share a
+  cell);
+- :class:`EngineStats` counts hits/misses for both layers, so callers can
+  assert sharing actually happened.
+
+Workload identity is its *name*: the engine fingerprints each workload
+(family, expected class, AI, instructions-per-access, plus the trace
+generator's code and closed-over parameters such as trace length) and
+refuses to mix two different workloads under one name — build one engine
+per suite (a :class:`~repro.study.Study` does this for you).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Iterable
+
+from repro.core import cachesim
+from repro.core.cachesim import HierarchyConfig, SimResult
+from repro.core.tracegen import TraceSpec, Workload
+
+__all__ = ["CellKey", "EngineStats", "SimEngine"]
+
+
+@dataclass(frozen=True)
+class CellKey:
+    """Content address of one simulation cell."""
+
+    workload: str
+    seed: int
+    cores: int
+    hierarchy: HierarchyConfig
+
+
+@dataclass
+class EngineStats:
+    """Hit/miss accounting for the two memoization layers."""
+
+    trace_runs: int = 0
+    trace_hits: int = 0
+    sim_runs: int = 0
+    sim_hits: int = 0
+
+    @property
+    def sim_hit_rate(self) -> float:
+        total = self.sim_runs + self.sim_hits
+        return self.sim_hits / total if total else 0.0
+
+    def as_dict(self) -> dict[str, float]:
+        return {
+            "trace_runs": self.trace_runs,
+            "trace_hits": self.trace_hits,
+            "sim_runs": self.sim_runs,
+            "sim_hits": self.sim_hits,
+            "sim_hit_rate": round(self.sim_hit_rate, 4),
+        }
+
+
+def _gen_signature(w: Workload) -> tuple:
+    """Content signature of the trace generator: its code object plus the
+    closed-over parameters (trace length, footprint, ...), so two suites
+    built with different ``refs`` cannot alias under one name."""
+    gen = w.gen
+    code = getattr(gen, "__code__", None)
+    code_id = (code.co_filename, code.co_firstlineno,
+               code.co_code) if code is not None else None
+    cells: tuple = ()
+    for cell in getattr(gen, "__closure__", None) or ():
+        try:
+            hash(cell.cell_contents)
+            cells += (cell.cell_contents,)
+        except TypeError:
+            cells += (repr(cell.cell_contents),)
+    return (code_id, cells)
+
+
+def _fingerprint(w: Workload) -> tuple:
+    return (w.family, w.expected_class, w.ai_ops_per_access,
+            w.instr_per_access, _gen_signature(w))
+
+
+class SimEngine:
+    """Memoized trace + simulation cache shared by all pipeline consumers."""
+
+    def __init__(self) -> None:
+        self._traces: dict[tuple[str, int, int], TraceSpec] = {}
+        self._sims: dict[CellKey, SimResult] = {}
+        self._fingerprints: dict[str, tuple] = {}
+        self.stats = EngineStats()
+
+    # ---- identity -------------------------------------------------------
+    def register(self, workload: Workload) -> None:
+        """Pin ``workload.name`` to this workload's parameters.
+
+        Raises ``ValueError`` if a *different* workload already owns the
+        name (the memoization key would silently alias two traces).
+        """
+        fp = _fingerprint(workload)
+        prev = self._fingerprints.get(workload.name)
+        if prev is None:
+            self._fingerprints[workload.name] = fp
+        elif prev != fp:
+            raise ValueError(
+                f"workload name {workload.name!r} already registered with "
+                f"different parameters {prev} != {fp}; use distinct names "
+                f"or a fresh SimEngine"
+            )
+
+    # ---- memoized layers ------------------------------------------------
+    def trace(self, workload: Workload, cores: int, *, seed: int = 0) -> TraceSpec:
+        """Per-thread trace for one (workload, cores, seed), memoized."""
+        self.register(workload)
+        key = (workload.name, cores, seed)
+        spec = self._traces.get(key)
+        if spec is None:
+            spec = workload.trace(cores, seed=seed)
+            self._traces[key] = spec
+            self.stats.trace_runs += 1
+        else:
+            self.stats.trace_hits += 1
+        return spec
+
+    def simulate(
+        self,
+        workload: Workload,
+        cores: int,
+        hierarchy: HierarchyConfig,
+        *,
+        seed: int = 0,
+    ) -> SimResult:
+        """Run (or recall) one simulation cell."""
+        self.register(workload)
+        key = CellKey(workload.name, seed, cores, hierarchy)
+        sim = self._sims.get(key)
+        if sim is None:
+            spec = self.trace(workload, cores, seed=seed)
+            sim = cachesim.simulate(
+                spec.addresses,
+                hierarchy,
+                ai_ops_per_access=workload.ai_ops_per_access,
+                instr_per_access=workload.instr_per_access,
+                l3_factor=spec.l3_factor,
+                name=hierarchy.name,
+            )
+            self._sims[key] = sim
+            self.stats.sim_runs += 1
+        else:
+            self.stats.sim_hits += 1
+        return sim
+
+    def sweep(
+        self,
+        workload: Workload,
+        cores: Iterable[int],
+        config_factory: Callable[[int], HierarchyConfig],
+        *,
+        seed: int = 0,
+    ) -> list[SimResult]:
+        """One simulation per core count — the shared Step-3 sweep loop."""
+        return [
+            self.simulate(workload, c, config_factory(c), seed=seed)
+            for c in cores
+        ]
+
+    # ---- introspection --------------------------------------------------
+    @property
+    def cells(self) -> int:
+        """Distinct simulation cells materialized so far."""
+        return len(self._sims)
+
+    def clear(self) -> None:
+        self._traces.clear()
+        self._sims.clear()
+        self._fingerprints.clear()
+        self.stats = EngineStats()

@@ -1,0 +1,145 @@
+"""Pluggable characterization substrates.
+
+DAMOV Step 3 asks one question — *where does this program's data movement
+stall?* — and this repo answers it on two very different substrates:
+
+=============  ===========================================================
+substrate      evidence
+=============  ===========================================================
+``trace``      word-address traces through the functional cache simulator
+               (``repro.core.cachesim``): AI / MPKI / LFMR -> six classes
+``hlo``        compiled-XLA cost terms (``repro.core.hlo_analysis`` +
+               ``repro.core.analytic``): compute / HBM / collective
+               roofline -> compute | hbm | collective | latency classes
+=============  ===========================================================
+
+Both implement the :class:`Substrate` protocol — ``characterize()`` returns
+a columnar :class:`~repro.study.result.StudyResult` whose rows always start
+with ``(name, class)`` — so callers (the ``python -m repro.study`` CLI, the
+benchmark driver) can swap backends with a flag.
+"""
+
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+from .result import StudyResult
+from .study import Study
+
+__all__ = ["Substrate", "TraceSubstrate", "HloSubstrate", "get_substrate"]
+
+
+@runtime_checkable
+class Substrate(Protocol):
+    """A backend that assigns every item a data-movement bottleneck class."""
+
+    name: str
+
+    def items(self) -> list[str]:
+        """Names of the items this substrate characterizes."""
+        ...
+
+    def characterize(self) -> StudyResult:
+        """One record per item; rows start with (name, class)."""
+        ...
+
+
+class TraceSubstrate:
+    """Trace-driven cache-simulation backend (the paper's methodology)."""
+
+    name = "trace"
+
+    def __init__(self, study: Study):
+        self.study = study
+
+    def items(self) -> list[str]:
+        return self.study.names()
+
+    def characterize(self) -> StudyResult:
+        cols = ("name", "class", "expected", "spatial", "temporal", "ai",
+                "mpki", "lfmr_mean", "lfmr_slope")
+        res = StudyResult("trace_characterization", cols)
+        for w in self.study:
+            s, t = self.study.locality(w)
+            m = self.study.metrics(w)
+            res.append((w.name, self.study.classify(w), w.expected_class,
+                        round(s, 3), round(t, 3), round(m.ai, 3),
+                        round(m.mpki, 2), round(m.lfmr_mean, 3),
+                        round(m.lfmr_slope, 3)))
+        return res
+
+
+class HloSubstrate:
+    """Compiled-XLA (TPU) backend: the same Step-3 question answered from
+    analytic FLOP / HBM-byte / collective-byte roofline terms per
+    (arch x shape x mesh) cell.
+
+    ``repro.launch`` / ``repro.models`` import jax; imports are deferred to
+    call time so the trace path stays importable on jax-less hosts.
+    """
+
+    name = "hlo"
+
+    def __init__(self, *, meshes: tuple[str, ...] = ("16x16", "2x16x16"),
+                 model_shards: int = 16):
+        self.meshes = meshes
+        self.model_shards = model_shards
+
+    @staticmethod
+    def _chips(mesh_name: str) -> int:
+        """Chip count is the product of the mesh dims ('2x16x16' -> 512)."""
+        n = 1
+        for d in mesh_name.split("x"):
+            n *= int(d)
+        return n
+
+    def _plans(self):
+        from repro.launch.cells import all_cells  # lazy: pulls in jax
+        return list(all_cells())
+
+    def items(self) -> list[str]:
+        return [f"{p.name}@{m}" for p in self._plans() for m in self.meshes]
+
+    def characterize(self) -> StudyResult:
+        from repro.core import analytic, hlo_analysis  # analytic needs models
+
+        cols = ("name", "class", "arch", "shape", "mesh", "ai",
+                "t_compute_s", "t_memory_s", "t_collective_s", "dominant",
+                "mfu_bound")
+        res = StudyResult("hlo_characterization", cols)
+        for plan in self._plans():
+            for mesh_name in self.meshes:
+                chips = self._chips(mesh_name)
+                model_shards = self.model_shards
+                c = analytic.cell_cost(
+                    plan.cfg, plan.shape, kind=plan.kind,
+                    microbatches=plan.microbatches,
+                    data_shards=chips // model_shards,
+                    model_shards=model_shards,
+                    infer_fsdp=plan.infer_fsdp,
+                )
+                tokens = plan.shape.global_batch * (
+                    plan.shape.seq_len if plan.kind != "decode" else 1)
+                rt = hlo_analysis.RooflineTerms(
+                    name=f"{plan.name}@{mesh_name}", chips=chips,
+                    hlo_flops=c.flops, hlo_bytes=c.hbm_bytes,
+                    collective_bytes=c.collective_bytes,
+                    model_flops=plan.cfg.model_flops(
+                        tokens, training=plan.kind == "train"),
+                )
+                res.append((rt.name, rt.bottleneck_class, plan.arch,
+                            plan.shape.name, mesh_name,
+                            round(rt.arithmetic_intensity, 3),
+                            f"{rt.t_compute:.3e}", f"{rt.t_memory:.3e}",
+                            f"{rt.t_collective:.3e}", rt.dominant,
+                            round(rt.mfu_bound, 3)))
+        return res
+
+
+def get_substrate(name: str, *, study: Study | None = None) -> Substrate:
+    """Factory behind the ``--substrate trace|hlo`` CLI flag."""
+    if name == "trace":
+        return TraceSubstrate(study if study is not None else Study())
+    if name == "hlo":
+        return HloSubstrate()
+    raise ValueError(f"unknown substrate {name!r}; expected 'trace' or 'hlo'")

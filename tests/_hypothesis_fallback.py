@@ -1,0 +1,50 @@
+"""Deterministic stand-ins for ``hypothesis`` (an optional test dep).
+
+When hypothesis is not installed, ``@given(st.xxx(...))`` degrades to a
+``pytest.mark.parametrize`` over a few fixed examples per strategy, so the
+property tests still collect and exercise their invariants — just without
+randomized search or shrinking.  Install the real thing with
+``pip install -e .[test]``.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+import pytest
+
+
+def settings(**_kw):
+    return lambda f: f
+
+
+class st:  # noqa: N801 - mimics hypothesis.strategies
+    @staticmethod
+    def integers(lo, hi):
+        return [lo, (lo + hi) // 2, hi]
+
+    @staticmethod
+    def lists(elem_examples, min_size=0, max_size=10):
+        rng = np.random.default_rng(0)
+        lo, hi = elem_examples[0], elem_examples[-1]
+        size = max(min_size, min(max_size, 32))
+        return [
+            [int(x) for x in rng.integers(lo, hi + 1, size=size)],
+            [lo] * max(min_size, 2),
+            list(elem_examples)[: max(min_size, len(elem_examples))],
+        ]
+
+
+def given(*strategies):
+    """Parametrize over the cartesian product of each strategy's examples."""
+
+    def deco(f):
+        names = [n for n in f.__code__.co_varnames[: f.__code__.co_argcount]
+                 if n != "self"][: len(strategies)]
+        combos = list(itertools.product(*strategies))
+        if len(names) == 1:
+            combos = [c[0] for c in combos]
+        return pytest.mark.parametrize(",".join(names), combos)(f)
+
+    return deco

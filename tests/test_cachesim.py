@@ -2,7 +2,12 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    # optional test dep: degrade to fixed-example parametrization
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import cachesim
 

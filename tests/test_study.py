@@ -1,0 +1,277 @@
+"""Tests for the unified ``repro.study`` characterization API.
+
+Covers the acceptance properties of the Study redesign:
+
+- memoization identity: engine-cached cells equal fresh standalone runs;
+- engine hit/miss accounting;
+- StudyResult export round-trips (JSON, CSV, records);
+- figure queries reproduce the free-function (seed) rows;
+- each (workload, cores, config) cell invokes ``cachesim.simulate`` at
+  most once across the whole figure set (call-count assertion).
+"""
+
+import json
+
+import pytest
+
+from repro.core import cachesim, classify, scalability, tracegen
+from repro.core.sweep import CORE_SWEEP
+from repro.study import SimEngine, Study, StudyResult
+
+REFS = 6_000  # short traces: this file exercises plumbing, not calibration
+
+
+@pytest.fixture(scope="module")
+def suite():
+    return tracegen.make_suite(refs=REFS)
+
+
+# --------------------------------------------------------------------------
+# SimEngine
+# --------------------------------------------------------------------------
+class TestEngine:
+    def test_memoized_cell_identical_to_fresh_simulation(self, suite):
+        w = suite[0]
+        cfg = cachesim.host_config(4)
+        engine = SimEngine()
+        first = engine.simulate(w, 4, cfg)
+        second = engine.simulate(w, 4, cfg)
+        assert second is first  # recalled, not re-run
+
+        spec = w.trace(4, seed=0)
+        fresh = cachesim.simulate(
+            spec.addresses, cfg,
+            ai_ops_per_access=w.ai_ops_per_access,
+            instr_per_access=w.instr_per_access,
+            l3_factor=spec.l3_factor, name=cfg.name,
+        )
+        assert first == fresh  # field-for-field equal to a standalone run
+
+    def test_content_addressing_not_identity(self, suite):
+        """Two structurally equal configs share one cell."""
+        w = suite[0]
+        engine = SimEngine()
+        a = engine.simulate(w, 4, cachesim.host_config(4))
+        b = engine.simulate(w, 4, cachesim.host_config(4))
+        assert a is b
+        assert engine.stats.sim_runs == 1 and engine.stats.sim_hits == 1
+
+    def test_hit_miss_accounting(self, suite):
+        w = suite[0]
+        engine = SimEngine()
+        engine.sweep(w, (1, 4), cachesim.host_config)
+        assert engine.stats.sim_runs == 2
+        assert engine.stats.sim_hits == 0
+        assert engine.stats.trace_runs == 2
+        engine.sweep(w, (1, 4), cachesim.host_config)
+        assert engine.stats.sim_runs == 2
+        assert engine.stats.sim_hits == 2
+        # distinct config -> new cells, but traces are recalled
+        engine.sweep(w, (1, 4), cachesim.ndp_config)
+        assert engine.stats.sim_runs == 4
+        assert engine.stats.trace_runs == 2
+        assert engine.stats.trace_hits >= 2
+        assert engine.cells == 4
+        assert 0.0 < engine.stats.sim_hit_rate < 1.0
+
+    def test_name_collision_rejected(self, suite):
+        w = suite[0]
+        impostor = tracegen.Workload(
+            name=w.name, family="gemm", expected_class="2c",
+            ai_ops_per_access=99.0, instr_per_access=99.0, gen=w.gen)
+        engine = SimEngine()
+        engine.register(w)
+        with pytest.raises(ValueError, match="already registered"):
+            engine.register(impostor)
+
+    def test_same_name_different_trace_length_rejected(self, suite):
+        """A same-named workload with a different generator (e.g. another
+        refs) must be refused, not silently served the cached trace."""
+        other = tracegen.make_suite(refs=2 * REFS)[0]
+        assert other.name == suite[0].name
+        engine = SimEngine()
+        engine.register(suite[0])
+        with pytest.raises(ValueError, match="already registered"):
+            engine.register(other)
+
+    def test_rebuilt_identical_suite_accepted(self):
+        """Two builds of the same suite fingerprint identically."""
+        engine = SimEngine()
+        engine.register(tracegen.make_suite(refs=REFS)[0])
+        engine.register(tracegen.make_suite(refs=REFS)[0])  # no raise
+
+    def test_clear_resets(self, suite):
+        engine = SimEngine()
+        engine.simulate(suite[0], 1, cachesim.host_config(1))
+        engine.clear()
+        assert engine.cells == 0
+        assert engine.stats.sim_runs == 0
+
+
+# --------------------------------------------------------------------------
+# Study queries vs the standalone free functions (seed behaviour)
+# --------------------------------------------------------------------------
+class TestStudyMatchesFreeFunctions:
+    def test_metrics_equal(self, suite):
+        study = Study(suite=suite)
+        for w in suite[:4]:
+            assert study.metrics(w) == classify.measure(w)
+
+    def test_mpki_baseline_without_4core_point(self, suite):
+        """A custom sweep lacking the 4-core host baseline falls back to
+        the closest core count instead of a silent (misclassifying) 0."""
+        m = classify.measure(suite[0], cores=(1, 16, 64))
+        assert m.mpki > 0.0
+
+    def test_scalability_points_equal(self, suite):
+        study = Study(suite=suite)
+        w = suite[0]
+        shared = study.scalability(w)
+        fresh = scalability.analyze(w)
+        for cfg in ("host", "host+pf", "ndp"):
+            for a, b in zip(shared.points[cfg], fresh.points[cfg]):
+                assert a.sim == b.sim
+                assert a.perf == b.perf
+                assert a.energy == b.energy
+
+    def test_figure_queries_reproduce_free_function_rows(self, suite):
+        """Regression: the Study-backed figures emit exactly the rows the
+        seed free-function plumbing produced."""
+        from benchmarks import paper_figures
+
+        study = Study(suite=suite)
+        fig4 = paper_figures.fig4_lfmr_mpki(study)
+        for w, row in zip(suite, fig4.to_rows()):
+            m = classify.measure(w)  # fresh, engine-free
+            assert row == (w.name, w.expected_class, round(m.mpki, 2)) + \
+                tuple(round(x, 3) for x in m.lfmr_by_cores)
+
+        fig5 = paper_figures.fig5_scalability(study)
+        rows = fig5.to_rows()
+        for i, w in enumerate(suite[:2]):
+            r = scalability.analyze(w)
+            for j, cfg in enumerate(("host", "host+pf", "ndp")):
+                expect = (w.name, w.expected_class, cfg) + tuple(
+                    round(p, 2) for p in r.perf_normalized(cfg))
+                assert rows[3 * i + j] == expect
+
+    def test_each_cell_simulated_at_most_once(self, suite, monkeypatch):
+        """Acceptance: across the whole figure set, cachesim.simulate runs
+        at most once per (workload, cores, config) cell."""
+        from benchmarks import paper_figures
+
+        calls = []
+        real = cachesim.simulate
+
+        def counting(addresses, config, **kw):
+            calls.append(config)
+            return real(addresses, config, **kw)
+
+        monkeypatch.setattr(cachesim, "simulate", counting)
+        small = suite[:4]
+        study = Study(suite=small)
+        paper_figures.fig1_roofline_mpki(study)
+        paper_figures.fig3_locality_clustering(study)
+        paper_figures.fig4_lfmr_mpki(study)
+        paper_figures.fig5_scalability(study)
+        paper_figures.fig7_energy(study)
+
+        # every actual simulate() call was an engine miss -> one per cell
+        assert len(calls) == study.engine.stats.sim_runs
+        assert len(calls) == study.engine.cells
+        # and sharing actually happened (fig4/fig7 re-read fig1's cells)
+        assert study.engine.stats.sim_hits > 0
+
+    def test_classification_verdicts_survive_the_engine(self, suite):
+        """The engine path yields the same verdict as the free functions.
+
+        (Full class *recovery* needs calibration-length traces and is
+        covered by test_classify; this file runs short traces.)"""
+        study = Study(suite=suite)
+        table = study.classification_table()
+        for w, rec in zip(suite, table.records()):
+            assert rec["predicted"] == classify.classify(classify.measure(w))
+            assert rec["name"] == w.name
+
+
+# --------------------------------------------------------------------------
+# StudyResult
+# --------------------------------------------------------------------------
+class TestStudyResult:
+    def _table(self):
+        return StudyResult(
+            "t", ("name", "x", "y"),
+            [("a", 1, 2.5), ("b", 3, 4.5)],
+        )
+
+    def test_json_round_trip(self):
+        t = self._table()
+        assert StudyResult.from_json(t.to_json()) == t
+
+    def test_records_round_trip(self):
+        t = self._table()
+        assert StudyResult.from_records("t", t.records()) == t
+
+    def test_csv_shape(self):
+        lines = self._table().to_csv().splitlines()
+        assert lines[0] == "name,x,y"
+        assert lines[1:] == ["a,1,2.5", "b,3,4.5"]
+
+    def test_column_access(self):
+        assert self._table().column("x") == [1, 3]
+
+    def test_row_width_validated(self):
+        with pytest.raises(ValueError, match="row width"):
+            StudyResult("t", ("a", "b"), [(1,)])
+        t = self._table()
+        with pytest.raises(ValueError, match="row width"):
+            t.append((1, 2))
+
+    def test_study_export_round_trip(self, suite):
+        study = Study(suite=suite[:3])
+        t = study.metrics_table()
+        back = StudyResult.from_json(t.to_json())
+        assert back.columns == t.columns
+        assert back.to_rows() == t.to_rows()
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+class TestCLI:
+    def test_trace_csv(self, capsys):
+        from repro.study.__main__ import main
+
+        rc = main(["--refs", "2000", "--cores", "1,4",
+                   "--sections", "classify", "--format", "csv"])
+        assert rc == 0
+        out = capsys.readouterr().out
+        assert out.startswith("## classification")
+        assert "STRCpy" in out
+
+    def test_trace_json_sections(self, capsys, tmp_path):
+        from repro.study.__main__ import main
+
+        out_file = tmp_path / "study.json"
+        rc = main(["--refs", "2000", "--cores", "1,4",
+                   "--workloads", "STRCpy,CHAHsti",
+                   "--sections", "metrics,classify",
+                   "--format", "json", "--out", str(out_file)])
+        assert rc == 0
+        tables = json.loads(out_file.read_text())
+        assert [t["name"] for t in tables] == ["metrics", "classification"]
+        metrics = StudyResult.from_json(json.dumps(tables[0]))
+        assert metrics.column("name") == ["STRCpy", "CHAHsti"]
+        assert "lfmr@4" in metrics.columns and "lfmr@16" not in metrics.columns
+
+    def test_unknown_substrate_rejected(self):
+        from repro.study.substrate import get_substrate
+
+        with pytest.raises(ValueError, match="unknown substrate"):
+            get_substrate("zsim")
+
+
+def test_core_sweep_single_source():
+    """Satellite: CORE_SWEEP is defined once and re-exported."""
+    assert classify.CORE_SWEEP is CORE_SWEEP
+    assert scalability.CORE_SWEEP is CORE_SWEEP

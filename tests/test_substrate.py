@@ -7,7 +7,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    # optional test dep: degrade to fixed-example parametrization
+    from _hypothesis_fallback import given, settings, st
 
 from repro import configs
 from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
