@@ -16,9 +16,13 @@ from repro.core import casestudies, classify, tracegen
 from repro.study import Study, StudyResult
 
 
-def default_study(refs: int = 60_000) -> Study:
-    """The standard synthetic-suite study all sections share."""
-    return Study(refs=refs)
+def default_study(refs: int | None = None, *, backend: str | None = None) -> Study:
+    """The standard synthetic-suite study all sections share.
+
+    ``refs`` defaults to :data:`repro.core.tracegen.DEFAULT_REFS`;
+    ``backend`` picks the cache-simulation implementation.
+    """
+    return Study(refs=refs, backend=backend)
 
 
 def _as_study(study) -> Study:
@@ -123,9 +127,9 @@ def fig18_summary_and_validation(study=None) -> StudyResult:
 
     # held-out traces at the same length as the training study's, so
     # thresholds and validation metrics are measured consistently
-    held = tracegen.make_suite(refs=study.refs or 60_000,
+    held = tracegen.make_suite(refs=study.refs or tracegen.DEFAULT_REFS,
                                variants=5, seed=123)[len(study):]
-    held_study = Study(suite=held)
+    held_study = Study(suite=held, backend=study.engine.backend)
     acc, _ = classify.validate(held_study.metrics_all(), thresholds)
 
     res = StudyResult("fig18", ("core_model", "class", "ndp_speedup_mean",

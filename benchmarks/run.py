@@ -46,14 +46,20 @@ def emit(section: str, result) -> list[tuple]:
 
 
 def main() -> None:
+    from repro.core.cachesim import BACKENDS
+    from repro.core.tracegen import DEFAULT_REFS
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="reduced trace length (CI)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--backend", choices=BACKENDS, default=None,
+                    help="cache-simulation implementation; default: "
+                         "$REPRO_SIM_BACKEND or 'vectorized'")
     args = ap.parse_args()
 
-    refs = 20_000 if args.fast else 60_000
-    study = Study(refs=refs)
+    refs = 20_000 if args.fast else DEFAULT_REFS
+    study = Study(refs=refs, backend=args.backend)
 
     sections = {
         "fig1": lambda: paper_figures.fig1_roofline_mpki(study),

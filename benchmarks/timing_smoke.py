@@ -1,0 +1,112 @@
+"""CI timing smoke: the vectorized backend must stay hardware-speed.
+
+Times one full-length (60k-ref) host-config simulation cell per workload
+family on the vectorized backend and fails if any cell exceeds the budget
+(default 1.0 s — an order of magnitude of headroom over a warm run, so the
+gate catches algorithmic regressions, not CI jitter).  With ``--compare``
+it also times the reference loop and reports the speedup per family.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.timing_smoke [--budget 1.0] [--compare]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from repro.core import cachesim, cachesim_vec, tracegen
+
+REFS = 60_000
+
+
+def _time(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", type=float, default=1.0,
+                    help="max seconds per vectorized 60k-ref cell")
+    ap.add_argument("--compare", action="store_true",
+                    help="also time the reference loop and print speedups")
+    ap.add_argument("--min-speedup", type=float, default=0.0,
+                    help="with --compare: fail if the aggregate "
+                         "reference/vectorized time ratio over all families "
+                         "drops below this (guards against silently losing "
+                         "vectorization; the per-cell budget alone would "
+                         "pass at reference-loop speed)")
+    ap.add_argument("--min-best-speedup", type=float, default=0.0,
+                    help="with --compare: fail if no family reaches this "
+                         "speedup (the acceptance criterion: a 60k-ref "
+                         "host cell >= 10x; streaming families clear it "
+                         "with wide margin, so this is noise-robust)")
+    args = ap.parse_args(argv)
+
+    byfam: dict[str, tracegen.Workload] = {}
+    for w in tracegen.make_suite(refs=REFS):
+        byfam.setdefault(w.family, w)
+
+    failures = []
+    total_vec = total_ref = 0.0
+    best_speedup = 0.0
+    for family, w in sorted(byfam.items()):
+        spec = w.trace(1)
+        cfg = cachesim.host_config(1)
+        cachesim_vec.simulate(spec.addresses, cfg,
+                              l3_factor=spec.l3_factor)  # warm
+        t_vec = _time(
+            # fresh array each call: defeat the identity-keyed L1 cache so
+            # the gate times a cold cell
+            lambda: cachesim_vec.simulate(np.array(spec.addresses), cfg,
+                                          l3_factor=spec.l3_factor),
+            repeats=3,
+        )
+        total_vec += t_vec
+        line = f"{family:10s} vec={t_vec * 1e3:7.1f}ms"
+        if args.compare:
+            t_ref = _time(
+                lambda: cachesim.simulate(spec.addresses, cfg,
+                                          backend="reference",
+                                          l3_factor=spec.l3_factor),
+                repeats=2,
+            )
+            total_ref += t_ref
+            best_speedup = max(best_speedup, t_ref / t_vec)
+            line += f"  ref={t_ref * 1e3:7.1f}ms  speedup={t_ref / t_vec:5.1f}x"
+        print(line)
+        if t_vec > args.budget:
+            failures.append((family, t_vec))
+
+    for family, t in failures:
+        print(f"FAIL: {family} vectorized 60k-ref cell took {t:.2f}s "
+              f"(> {args.budget:.2f}s budget)", file=sys.stderr)
+    if args.compare:
+        aggregate = total_ref / total_vec
+        print(f"aggregate speedup over {len(byfam)} families: {aggregate:.1f}x"
+              f" (best family: {best_speedup:.1f}x)")
+        if args.min_speedup and aggregate < args.min_speedup:
+            print(f"FAIL: aggregate speedup {aggregate:.1f}x < "
+                  f"{args.min_speedup:.1f}x floor", file=sys.stderr)
+            return 1
+        if args.min_best_speedup and best_speedup < args.min_best_speedup:
+            print(f"FAIL: best-family speedup {best_speedup:.1f}x < "
+                  f"{args.min_best_speedup:.1f}x floor", file=sys.stderr)
+            return 1
+    if failures:
+        return 1
+    print(f"ok: all families within the {args.budget:.2f}s budget")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

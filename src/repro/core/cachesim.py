@@ -24,12 +24,15 @@ The simulator is *functional* (hit/miss accounting); timing/energy come from
 
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 
 import numpy as np
 
 LINE_BYTES = 64
 WORDS_PER_LINE = LINE_BYTES // 8
+
+BACKENDS = ("reference", "vectorized")
 
 __all__ = [
     "CacheLevelConfig",
@@ -38,7 +41,25 @@ __all__ = [
     "simulate",
     "host_config",
     "ndp_config",
+    "BACKENDS",
+    "default_backend",
 ]
+
+
+def default_backend() -> str:
+    """Backend used when ``simulate(..., backend=None)``.
+
+    ``REPRO_SIM_BACKEND`` (``reference`` | ``vectorized``) overrides; the
+    built-in default is the vectorized backend, which is counter-identical
+    to the reference loop (see ``tests/test_cachesim_vec.py``) and 10-40x
+    faster.
+    """
+    backend = os.environ.get("REPRO_SIM_BACKEND", "vectorized")
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"REPRO_SIM_BACKEND={backend!r} invalid; expected one of {BACKENDS}"
+        )
+    return backend
 
 
 @dataclass(frozen=True)
@@ -209,6 +230,7 @@ def simulate(
     instr_per_access: float = 2.0,
     l3_factor: float = 1.0,
     name: str | None = None,
+    backend: str | None = None,
 ) -> SimResult:
     """Run a word-address trace through a cache hierarchy.
 
@@ -220,7 +242,25 @@ def simulate(
     denominator.
     ``l3_factor``: effective fraction of the shared LLC available to this
     thread (contention model; ignored for NDP).
+    ``backend``: ``"reference"`` (this module's per-line loop) or
+    ``"vectorized"`` (:mod:`repro.core.cachesim_vec`, counter-identical);
+    ``None`` resolves via :func:`default_backend` / ``REPRO_SIM_BACKEND``.
     """
+    if backend is None:
+        backend = default_backend()
+    if backend == "vectorized":
+        from . import cachesim_vec  # deferred: cachesim_vec imports us
+
+        return cachesim_vec.simulate(
+            addresses,
+            config,
+            ai_ops_per_access=ai_ops_per_access,
+            instr_per_access=instr_per_access,
+            l3_factor=l3_factor,
+            name=name,
+        )
+    if backend != "reference":
+        raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
     addr = np.asarray(addresses, dtype=np.int64)
     lines = addr // WORDS_PER_LINE
 

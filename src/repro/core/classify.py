@@ -97,7 +97,7 @@ def measure(workload: Workload, *, seed: int = 0,
     temporal = locality.temporal_locality(spec1.addresses)
     spatial = locality.spatial_locality(spec1.addresses)
 
-    sims = engine.sweep(workload, cores, cachesim.host_config, seed=seed)
+    sims = engine.sweep_parallel(workload, cores, cachesim.host_config, seed=seed)
     lfmrs = [s.lfmr for s in sims]
     # MPKI baseline is the 4-core host (the paper's Step-1 machine); for a
     # custom sweep without 4, fall back to the closest core count rather

@@ -238,7 +238,7 @@ def analyze(
     factories = sweep_configs(nuca=nuca)
     for cfg_name, factory in factories.items():
         is_ndp = cfg_name == "ndp"
-        sims = engine.sweep(workload, cores, factory, seed=seed)
+        sims = engine.sweep_parallel(workload, cores, factory, seed=seed)
         pts: list[SystemPoint] = []
         for c, sim in zip(cores, sims):
             spec = engine.trace(workload, c, seed=seed)

@@ -23,7 +23,9 @@ from __future__ import annotations
 import argparse
 import sys
 
+from repro.core.cachesim import BACKENDS
 from repro.core.sweep import CORE_SWEEP
+from repro.core.tracegen import DEFAULT_REFS
 
 from .result import StudyResult
 from .study import Study
@@ -47,7 +49,10 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--substrate", choices=("trace", "hlo"), default="trace",
                     help="trace-driven cache simulation or compiled-XLA "
                          "roofline backend")
-    ap.add_argument("--refs", type=int, default=60_000,
+    ap.add_argument("--backend", choices=BACKENDS, default=None,
+                    help="cache-simulation implementation (trace substrate); "
+                         "default: $REPRO_SIM_BACKEND or 'vectorized'")
+    ap.add_argument("--refs", type=int, default=DEFAULT_REFS,
                     help="references per synthetic trace (trace substrate)")
     ap.add_argument("--variants", type=int, default=1,
                     help="jittered clones per workload family")
@@ -98,7 +103,7 @@ def main(argv: list[str] | None = None) -> int:
     else:
         study = Study(refs=args.refs, variants=args.variants,
                       suite_seed=args.suite_seed, seed=args.seed,
-                      cores=args.cores)
+                      cores=args.cores, backend=args.backend)
         if args.workloads:
             try:
                 suite = [study.workload(n) for n in args.workloads.split(",")]

@@ -26,6 +26,8 @@ per suite (a :class:`~repro.study.Study` does this for you).
 
 from __future__ import annotations
 
+import os
+from concurrent.futures import Executor, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, Iterable
 
@@ -94,9 +96,21 @@ def _fingerprint(w: Workload) -> tuple:
 
 
 class SimEngine:
-    """Memoized trace + simulation cache shared by all pipeline consumers."""
+    """Memoized trace + simulation cache shared by all pipeline consumers.
 
-    def __init__(self) -> None:
+    ``backend`` selects the cache-simulation implementation for every cell
+    this engine runs: ``"vectorized"`` (default, counter-identical and much
+    faster) or ``"reference"`` (the per-line loop) — see
+    :func:`repro.core.cachesim.default_backend` for the ``None`` resolution
+    order (``REPRO_SIM_BACKEND`` wins, then vectorized).
+    """
+
+    def __init__(self, *, backend: str | None = None) -> None:
+        if backend is not None and backend not in cachesim.BACKENDS:
+            raise ValueError(
+                f"unknown backend {backend!r}; expected one of {cachesim.BACKENDS}"
+            )
+        self.backend = backend
         self._traces: dict[tuple[str, int, int], TraceSpec] = {}
         self._sims: dict[CellKey, SimResult] = {}
         self._fingerprints: dict[str, tuple] = {}
@@ -148,19 +162,31 @@ class SimEngine:
         sim = self._sims.get(key)
         if sim is None:
             spec = self.trace(workload, cores, seed=seed)
-            sim = cachesim.simulate(
-                spec.addresses,
-                hierarchy,
-                ai_ops_per_access=workload.ai_ops_per_access,
-                instr_per_access=workload.instr_per_access,
-                l3_factor=spec.l3_factor,
-                name=hierarchy.name,
-            )
+            sim = self._run_cell(workload, spec, hierarchy)
             self._sims[key] = sim
             self.stats.sim_runs += 1
         else:
             self.stats.sim_hits += 1
         return sim
+
+    def _run_cell(
+        self, workload: Workload, spec: TraceSpec, hierarchy: HierarchyConfig
+    ) -> SimResult:
+        """One un-memoized simulation.
+
+        Writes nothing on the engine, so workers may run it concurrently;
+        the vectorized backend's module-level L1-filter cache is the one
+        piece of shared state underneath, and it takes its own lock.
+        """
+        return cachesim.simulate(
+            spec.addresses,
+            hierarchy,
+            ai_ops_per_access=workload.ai_ops_per_access,
+            instr_per_access=workload.instr_per_access,
+            l3_factor=spec.l3_factor,
+            name=hierarchy.name,
+            backend=self.backend,
+        )
 
     def sweep(
         self,
@@ -175,6 +201,63 @@ class SimEngine:
             self.simulate(workload, c, config_factory(c), seed=seed)
             for c in cores
         ]
+
+    def sweep_parallel(
+        self,
+        workload: Workload,
+        cores: Iterable[int],
+        config_factory: Callable[[int], HierarchyConfig],
+        *,
+        seed: int = 0,
+        max_workers: int | None = None,
+        executor: Executor | None = None,
+    ) -> list[SimResult]:
+        """:meth:`sweep`, with the missing cells fanned across an executor.
+
+        Results, memoization and stats accounting are identical to the
+        sequential sweep — each missing cell is simulated exactly once and
+        stored; already-cached cells are recalled.  Traces are materialized
+        up front (memoized, sequential) so workers share read-only state.
+        ``executor`` lets callers supply a pool (e.g. one shared across
+        sweeps); otherwise a :class:`~concurrent.futures.ThreadPoolExecutor`
+        with ``max_workers`` (default: cpu count, capped at 8) is used.
+        NumPy releases the GIL in the vectorized backend's hot loops, so
+        threads — which can share the engine's caches — are the right
+        executor type.
+        """
+        self.register(workload)
+        cells = [(c, config_factory(c)) for c in cores]
+        specs = {c: self.trace(workload, c, seed=seed) for c, _ in cells}
+        keys = [CellKey(workload.name, seed, c, h) for c, h in cells]
+
+        missing: dict[CellKey, tuple[int, HierarchyConfig]] = {}
+        hits = 0
+        for key, (c, h) in zip(keys, cells):
+            if key in self._sims:
+                hits += 1
+            elif key in missing:
+                hits += 1  # duplicate cell within this sweep: one run
+            else:
+                missing[key] = (c, h)
+
+        if missing:
+            own_pool = executor is None
+            pool = executor if executor is not None else ThreadPoolExecutor(
+                max_workers=max_workers or min(os.cpu_count() or 1, 8)
+            )
+            try:
+                futures = {
+                    key: pool.submit(self._run_cell, workload, specs[c], h)
+                    for key, (c, h) in missing.items()
+                }
+                for key, fut in futures.items():
+                    self._sims[key] = fut.result()
+            finally:
+                if own_pool:
+                    pool.shutdown()
+            self.stats.sim_runs += len(missing)
+        self.stats.sim_hits += hits
+        return [self._sims[key] for key in keys]
 
     # ---- introspection --------------------------------------------------
     @property

@@ -43,18 +43,24 @@ class Study:
         self,
         suite: Iterable[Workload] | None = None,
         *,
-        refs: int = 60_000,
+        refs: int | None = None,
         variants: int = 1,
         suite_seed: int = 0,
         seed: int = 0,
         cores: tuple[int, ...] = CORE_SWEEP,
         engine: SimEngine | None = None,
+        backend: str | None = None,
     ) -> None:
         """``suite``: explicit workloads; otherwise the synthetic DAMOV suite
-        ``tracegen.make_suite(refs, variants=variants, seed=suite_seed)``.
+        ``tracegen.make_suite(refs, variants=variants, seed=suite_seed)``
+        (``refs`` defaults to :data:`repro.core.tracegen.DEFAULT_REFS`).
         ``seed`` is the *trace* seed and ``cores`` the core sweep shared by
-        every query."""
+        every query.  ``backend`` picks the cache-simulation implementation
+        for the engine this study builds (``"vectorized"``/``"reference"``;
+        ignored when an ``engine`` is supplied)."""
         if suite is None:
+            if refs is None:
+                refs = tracegen.DEFAULT_REFS
             suite = tracegen.make_suite(refs=refs, variants=variants,
                                         seed=suite_seed)
             self.refs: int | None = refs
@@ -63,7 +69,7 @@ class Study:
         self.suite: list[Workload] = list(suite)
         self.seed = seed
         self.cores = tuple(cores)
-        self.engine = engine if engine is not None else SimEngine()
+        self.engine = engine if engine is not None else SimEngine(backend=backend)
         for w in self.suite:
             self.engine.register(w)
         self._by_name = {w.name: w for w in self.suite}

@@ -1,0 +1,201 @@
+"""Differential harness: vectorized vs reference cache-simulation backend.
+
+The vectorized backend's contract is *counter identity*: for every cell the
+pipeline can produce, ``level_hits`` / ``level_misses`` /
+``prefetch_issued`` / ``prefetch_useful`` (and the derived LFMR/MPKI) must
+equal the reference per-line loop exactly — a fast-but-wrong simulator
+would silently corrupt every downstream classification.  The matrix here
+sweeps all 7 workload families x {host, host+pf, host+nuca, ndp} x
+``l3_factor`` in {1, 1/4, 1/16}.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import cachesim, cachesim_vec, tracegen
+
+REFS = 4_000  # short traces: the matrix is 84 cells x 2 backends
+
+CONFIGS = {
+    "host": lambda: cachesim.host_config(4),
+    "host+pf": lambda: cachesim.host_config(4, prefetcher=True),
+    "host+nuca": lambda: cachesim.host_config(4, nuca_mb_per_core=2.0),
+    "ndp": lambda: cachesim.ndp_config(4),
+}
+L3_FACTORS = (1.0, 1.0 / 4, 1.0 / 16)
+
+
+def _one_per_family():
+    byfam = {}
+    for w in tracegen.make_suite(refs=REFS):
+        byfam.setdefault(w.family, w)
+    assert set(byfam) == set(tracegen.FAMILIES)
+    return byfam
+
+
+_FAMILY_WORKLOADS = _one_per_family()
+
+
+class TestDifferentialMatrix:
+    @pytest.mark.parametrize("family", sorted(tracegen.FAMILIES))
+    @pytest.mark.parametrize("config_name", sorted(CONFIGS))
+    @pytest.mark.parametrize("l3_factor", L3_FACTORS)
+    def test_counters_identical(self, family, config_name, l3_factor):
+        w = _FAMILY_WORKLOADS[family]
+        spec = w.trace(4)
+        kwargs = dict(
+            ai_ops_per_access=w.ai_ops_per_access,
+            instr_per_access=w.instr_per_access,
+            l3_factor=l3_factor,
+        )
+        cfg = CONFIGS[config_name]()
+        ref = cachesim.simulate(spec.addresses, cfg, backend="reference",
+                                **kwargs)
+        vec = cachesim.simulate(spec.addresses, cfg, backend="vectorized",
+                                **kwargs)
+        assert vec.level_hits == ref.level_hits
+        assert vec.level_misses == ref.level_misses
+        assert vec.prefetch_issued == ref.prefetch_issued
+        assert vec.prefetch_useful == ref.prefetch_useful
+        assert vec.lines_touched == ref.lines_touched
+        assert vec == ref  # dataclass-wide: accesses/instructions/ai/name
+        assert vec.lfmr == ref.lfmr and vec.mpki == ref.mpki
+
+    def test_empty_trace(self):
+        cfg = cachesim.host_config(1)
+        empty = np.empty(0, dtype=np.int64)
+        ref = cachesim.simulate(empty, cfg, backend="reference")
+        vec = cachesim.simulate(empty, cfg, backend="vectorized")
+        assert ref == vec
+        assert vec.level_misses == (0, 0, 0)
+
+    def test_single_access(self):
+        cfg = cachesim.ndp_config()
+        ref = cachesim.simulate(np.array([42]), cfg, backend="reference")
+        vec = cachesim.simulate(np.array([42]), cfg, backend="vectorized")
+        assert ref == vec
+
+    def test_adversarial_single_set_thrash(self):
+        """Every access lands in one L1 set, cycling ways+1 lines: the
+        stack-distance path must agree with the reference on pure conflict
+        misses (no capacity slack, long scan windows)."""
+        cfg = cachesim.host_config(1)
+        l1 = cfg.levels[0]
+        stride = l1.sets * cachesim.WORDS_PER_LINE
+        lines = np.arange(l1.ways + 1) * stride
+        addr = np.tile(lines, 200)
+        ref = cachesim.simulate(addr, cfg, backend="reference")
+        vec = cachesim.simulate(addr, cfg, backend="vectorized")
+        assert ref == vec
+        assert vec.l1_misses == addr.size  # ways+1-cycle always misses
+
+
+class TestBackendSelection:
+    def test_env_var_resolution(self, monkeypatch):
+        monkeypatch.setenv("REPRO_SIM_BACKEND", "reference")
+        assert cachesim.default_backend() == "reference"
+        monkeypatch.setenv("REPRO_SIM_BACKEND", "vectorized")
+        assert cachesim.default_backend() == "vectorized"
+        monkeypatch.delenv("REPRO_SIM_BACKEND")
+        assert cachesim.default_backend() == "vectorized"
+
+    def test_invalid_env_var_rejected(self, monkeypatch):
+        monkeypatch.setenv("REPRO_SIM_BACKEND", "zsim")
+        with pytest.raises(ValueError, match="REPRO_SIM_BACKEND"):
+            cachesim.default_backend()
+
+    def test_invalid_backend_argument_rejected(self):
+        with pytest.raises(ValueError, match="unknown backend"):
+            cachesim.simulate(np.arange(8), cachesim.host_config(),
+                              backend="zsim")
+
+    def test_engine_rejects_unknown_backend(self):
+        from repro.study import SimEngine
+
+        with pytest.raises(ValueError, match="unknown backend"):
+            SimEngine(backend="zsim")
+
+    def test_engine_backends_agree(self):
+        from repro.study import SimEngine
+
+        w = _FAMILY_WORKLOADS["contended"]
+        cfg = cachesim.host_config(4)
+        ref = SimEngine(backend="reference").simulate(w, 4, cfg)
+        vec = SimEngine(backend="vectorized").simulate(w, 4, cfg)
+        assert ref == vec
+
+
+class TestFirstLevelCache:
+    def test_identity_keyed_reuse_is_exact(self):
+        """The same trace array through host and NDP shares one L1 filter;
+        counters still match per-config reference runs."""
+        w = _FAMILY_WORKLOADS["l1cap"]
+        spec = w.trace(1)
+        for cfg in (cachesim.host_config(1), cachesim.ndp_config(1),
+                    cachesim.host_config(1, prefetcher=True)):
+            ref = cachesim.simulate(spec.addresses, cfg, backend="reference")
+            vec = cachesim.simulate(spec.addresses, cfg, backend="vectorized")
+            assert ref == vec, cfg.name
+
+    def test_cache_is_bounded(self):
+        for i in range(3 * cachesim_vec._L1_CACHE_MAX):
+            cachesim_vec.simulate(np.arange(64) + 512 * i,
+                                  cachesim.host_config(1))
+        assert len(cachesim_vec._L1_CACHE) <= cachesim_vec._L1_CACHE_MAX
+
+    def test_in_place_mutation_recomputes(self):
+        """Mutating an address array between calls must not serve stale
+        counters from the identity-keyed cache."""
+        addr = np.arange(4096, dtype=np.int64)
+        cfg = cachesim.host_config(1)
+        first = cachesim_vec.simulate(addr, cfg)
+        addr[:] = 0  # same object, new content: one line, all hits
+        second = cachesim_vec.simulate(addr, cfg)
+        assert second != first
+        assert second == cachesim.simulate(addr, cfg, backend="reference")
+        assert second.lines_touched == 1
+
+    def test_single_element_mutation_recomputes(self):
+        """The full-buffer fingerprint catches a one-element change at an
+        arbitrary (non-grid) index."""
+        addr = np.arange(4096, dtype=np.int64)
+        cfg = cachesim.host_config(1)
+        first = cachesim_vec.simulate(addr, cfg)
+        addr[17] = 10_000_000  # one extra distinct line
+        second = cachesim_vec.simulate(addr, cfg)
+        assert second.lines_touched == first.lines_touched + 1
+        assert second == cachesim.simulate(addr, cfg, backend="reference")
+
+
+@pytest.mark.slow
+def test_vectorized_speedup_60k_host_cell():
+    """Acceptance: a 60k-ref host-config cell runs >= 10x faster on the
+    vectorized backend than on the reference loop."""
+    w = next(x for x in tracegen.make_suite(refs=60_000)
+             if x.family == "stream")
+    spec = w.trace(1)
+    cfg = cachesim.host_config(1)
+
+    cachesim.simulate(spec.addresses, cfg, backend="vectorized")  # warm
+    t_vec = min(
+        _timed(lambda: cachesim_vec.simulate(
+            np.array(spec.addresses), cfg))  # fresh array: no L1-cache hit
+        for _ in range(3)
+    )
+    t_ref = min(
+        _timed(lambda: cachesim.simulate(spec.addresses, cfg,
+                                         backend="reference"))
+        for _ in range(2)
+    )
+    assert t_vec < 1.0, f"vectorized 60k cell took {t_vec:.2f}s"
+    assert t_ref / t_vec >= 10.0, (
+        f"speedup {t_ref / t_vec:.1f}x < 10x (ref {t_ref*1e3:.0f}ms, "
+        f"vec {t_vec*1e3:.0f}ms)")
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0

@@ -54,7 +54,8 @@ class TestClassifier:
 
 class TestScalability:
     # Full-length traces here: cold-miss effects at 30k refs flatten the
-    # 2b/2c classes (calibration is at 60k, the suite default).
+    # 2b/2c classes (calibration is at tracegen.DEFAULT_REFS, the suite
+    # default).
     _FULL = {w.name: w for w in tracegen.make_suite()}
 
     def test_class_speedup_ordering(self):

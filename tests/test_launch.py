@@ -43,9 +43,10 @@ class TestShardingResolution:
     """Resolution math against abstract production meshes (no devices)."""
 
     def _fake_mesh(self, shape, axes):
-        # AbstractMesh resolves shapes without real devices
-        from jax.sharding import AbstractMesh
-        return AbstractMesh(shape, axes)
+        # AbstractMesh resolves shapes without real devices; the helper
+        # papers over the constructor change across jax releases.
+        from repro.launch.mesh import make_abstract_mesh
+        return make_abstract_mesh(shape, axes)
 
     def test_divisibility_fallbacks_16x16(self):
         mesh = self._fake_mesh((16, 16), ("data", "model"))

@@ -1,0 +1,94 @@
+"""Property-style invariants of the reference ``_LRUCache``.
+
+These pin down the reference model the vectorized backend is verified
+against (``tests/test_cachesim_vec.py``):
+
+- conservation: hits + misses == number of counted accesses;
+- capacity: per-set occupancy never exceeds ``ways``;
+- LRU protection: a just-touched line survives until ``ways`` *distinct*
+  conflicting (same-set) lines intervene, and is evicted by the time
+  ``ways`` of them have.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    # optional test dep: degrade to fixed-example parametrization
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core.cachesim import CacheLevelConfig, _LRUCache
+
+
+def small_cache(ways: int = 4, sets: int = 8) -> _LRUCache:
+    return _LRUCache(CacheLevelConfig(64 * sets * ways, ways))
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_conservation_and_capacity(seed):
+    rng = np.random.default_rng(seed)
+    cache = small_cache()
+    n = int(rng.integers(200, 3000))
+    lines = rng.integers(0, 64, size=n)
+    for line in lines.tolist():
+        cache.access(line)
+    assert cache.hits + cache.misses == n
+    for s in cache._sets:
+        assert len(s) <= cache.ways
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_uncounted_accesses_not_in_conservation(seed):
+    """Prefetch fills (count=False) mutate the set but not the counters."""
+    rng = np.random.default_rng(seed)
+    cache = small_cache()
+    counted = 0
+    for line in rng.integers(0, 64, size=500).tolist():
+        count = bool(rng.integers(0, 2))
+        cache.access(line, count=count)
+        counted += count
+        assert cache.hits + cache.misses == counted
+    for s in cache._sets:
+        assert len(s) <= cache.ways
+
+
+@given(st.integers(1, 1000))
+@settings(max_examples=25, deadline=None)
+def test_retouched_line_protected_until_ways_conflicts(seed):
+    """After touching A, A stays resident while < ways distinct same-set
+    lines intervene — regardless of how often they repeat — and is gone
+    once ways distinct conflicting lines have been inserted."""
+    rng = np.random.default_rng(seed)
+    cache = small_cache()
+    sets, ways = cache.sets, cache.ways
+    target = int(rng.integers(0, 1 << 20)) * sets  # set 0
+    conflicts = (np.arange(1, 3 * ways + 1) * sets) + target
+
+    cache.access(target)
+    k = int(rng.integers(0, ways))  # distinct conflicting lines < ways
+    # repeat each conflict a few times: repeats must not count twice
+    for line in np.repeat(conflicts[:k], 3).tolist():
+        cache.access(line)
+    assert cache.contains(target), (seed, k)
+    assert cache.access(target) is True  # the re-touch itself hits
+
+    # now push `ways` distinct conflicts: target must be evicted
+    for line in conflicts[k:k + ways].tolist():
+        cache.access(line)
+    assert not cache.contains(target)
+    assert cache.access(target) is False
+
+
+def test_eviction_order_is_lru_not_fifo():
+    """Touching a line mid-stream refreshes it: FIFO would evict it."""
+    cache = small_cache(ways=2, sets=1)
+    cache.access(0)       # [0]
+    cache.access(1)       # [0, 1]
+    cache.access(0)       # refresh: [1, 0]
+    cache.access(2)       # evicts 1, not 0
+    assert cache.contains(0)
+    assert not cache.contains(1)

@@ -108,6 +108,50 @@ class TestEngine:
         assert engine.stats.sim_runs == 0
 
 
+class TestSweepParallel:
+    CORES = (1, 4, 16)
+
+    def test_results_equal_sequential_sweep(self, suite):
+        w = suite[0]
+        seq = SimEngine().sweep(w, self.CORES, cachesim.host_config)
+        par = SimEngine().sweep_parallel(w, self.CORES, cachesim.host_config)
+        assert par == seq
+
+    def test_memoization_and_stats_match_sequential(self, suite):
+        w = suite[0]
+        engine = SimEngine()
+        engine.sweep_parallel(w, self.CORES, cachesim.host_config)
+        assert engine.stats.sim_runs == len(self.CORES)
+        assert engine.stats.sim_hits == 0
+        assert engine.cells == len(self.CORES)
+        # second sweep: all recalled, nothing re-simulated
+        first = engine.sweep_parallel(w, self.CORES, cachesim.host_config)
+        assert engine.stats.sim_runs == len(self.CORES)
+        assert engine.stats.sim_hits == len(self.CORES)
+        # parallel and sequential paths share one cell store
+        second = engine.sweep(w, self.CORES, cachesim.host_config)
+        assert [a is b for a, b in zip(first, second)] == [True] * 3
+
+    def test_duplicate_cells_simulated_once(self, suite):
+        w = suite[0]
+        engine = SimEngine()
+        sims = engine.sweep_parallel(w, (4, 4, 4), cachesim.host_config)
+        assert sims[0] is sims[1] is sims[2]
+        assert engine.stats.sim_runs == 1
+        assert engine.stats.sim_hits == 2
+
+    def test_caller_supplied_executor(self, suite):
+        from concurrent.futures import ThreadPoolExecutor
+
+        w = suite[0]
+        engine = SimEngine()
+        with ThreadPoolExecutor(max_workers=2) as pool:
+            par = engine.sweep_parallel(w, self.CORES, cachesim.ndp_config,
+                                        executor=pool)
+            assert not pool._shutdown  # caller's pool is left running
+        assert par == SimEngine().sweep(w, self.CORES, cachesim.ndp_config)
+
+
 # --------------------------------------------------------------------------
 # Study queries vs the standalone free functions (seed behaviour)
 # --------------------------------------------------------------------------
