@@ -119,6 +119,28 @@ def fig7_energy(study=None, *, nuca=False) -> StudyResult:
 
 
 # --------------------------------------------------------------------------
+# Table 3: the registered benchmark-suite roster (classification section).
+# Synthetic family expansions and captured Pallas-kernel traces appear in
+# one table, classified by one methodology (repro.suite).
+# --------------------------------------------------------------------------
+def table3_suite_roster(runner=None, *, refs: int | None = None,
+                        store=None, backend: str | None = None) -> StudyResult:
+    """One row per suite entry: domain, source, metrics, assigned vs
+    expected class.  ``runner``: a :class:`repro.suite.SuiteRunner` to
+    reuse (engine + result store); otherwise a runner over the default
+    registry at ``refs`` is built, persisting to ``store`` (a
+    :class:`repro.suite.ResultStore`; None disables persistence) and
+    simulating on ``backend``."""
+    if runner is None:
+        from repro.suite import SuiteRunner, default_registry
+        runner = SuiteRunner(default_registry(refs=refs), store=store,
+                             backend=backend)
+    res = runner.roster()
+    res.name = "table3"
+    return res
+
+
+# --------------------------------------------------------------------------
 # Figure 18 + §3.5: per-class summary and held-out validation accuracy
 # --------------------------------------------------------------------------
 def fig18_summary_and_validation(study=None) -> StudyResult:

@@ -16,6 +16,9 @@ Sections map 1:1 to paper artifacts:
 - fig5   — scalability curves, 3 systems (Figs. 5, 16)
 - fig7   — energy breakdowns (Figs. 7-17)
 - fig18  — per-class NDP-speedup summary + §3.5 validation accuracy
+- table3 — the registered benchmark-suite roster (repro.suite): synthetic
+           family expansions + captured Pallas-kernel traces in one
+           classification table
 - case1..case4 — §5 case studies
 - roofline — §Roofline TPU table (from results/dryrun artifacts)
 - kernels  — Pallas kernel microbench + v5e roofline bounds
@@ -28,6 +31,7 @@ import sys
 import time
 
 from repro.study import Study, StudyResult
+from repro.suite import ResultStore
 
 from . import kernel_bench, paper_figures, roofline_table
 
@@ -69,6 +73,10 @@ def main() -> None:
         "fig5_nuca": lambda: paper_figures.fig5_scalability(study, nuca=True),
         "fig7": lambda: paper_figures.fig7_energy(study),
         "fig18": lambda: paper_figures.fig18_summary_and_validation(study),
+        # table3 shares the suite CLI's content-addressed result store, so
+        # repeat benchmark runs recall the roster instead of re-simulating
+        "table3": lambda: paper_figures.table3_suite_roster(
+            refs=refs, store=ResultStore(), backend=args.backend),
         "case1": lambda: paper_figures.case1_noc(study),
         "case2": lambda: paper_figures.case2_accelerators(study),
         "case3": lambda: paper_figures.case3_core_models(study),

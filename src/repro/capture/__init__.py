@@ -1,0 +1,25 @@
+"""``repro.capture`` — memory-trace capture from the repo's Pallas kernels.
+
+Turns each kernel's launch geometry (grid + BlockSpecs, mirrored by the
+``repro.kernels.*.capture`` hooks) into the per-grid-step HBM word-address
+stream the DAMOV pipeline consumes, so the repo's real kernels are
+characterization *subjects*, not bystanders.  Deterministic; requires
+neither a TPU nor jax.
+"""
+
+from .grid import CaptureResult, GridCapture, OperandSpec, walk  # noqa: F401
+from .kernels import (  # noqa: F401
+    CAPTURED_KERNELS,
+    CapturedKernel,
+    captured_workloads,
+)
+
+__all__ = [
+    "OperandSpec",
+    "GridCapture",
+    "CaptureResult",
+    "walk",
+    "CapturedKernel",
+    "CAPTURED_KERNELS",
+    "captured_workloads",
+]

@@ -1,0 +1,226 @@
+"""Pallas BlockSpec/grid DMA walker: kernel launch geometry -> HBM trace.
+
+A Pallas TPU kernel's HBM traffic is fully determined by its launch
+geometry: the grid, and one ``BlockSpec`` (block shape + index map) per
+operand.  The pipeline fetches an *input* block when its index map output
+changes between consecutive grid steps (an unchanged block is kept resident
+in VMEM — the "revisiting" optimization), and writes an *output* block on
+the last consecutive grid step that maps to it.  ``pl.when`` guards inside
+the kernel body do **not** suppress these automatic copies; they gate
+compute only.
+
+:func:`walk` replays that schedule in pure NumPy and emits the resulting
+HBM **word**-address stream (8-byte words, matching the DAMOV trace
+convention; fp32 elements pack two per word) — loads and stores per operand
+tile, in issue order.  The walker is deterministic, needs neither a TPU nor
+jax, and produces the same word-address traces
+:mod:`repro.core.cachesim` consumes for the synthetic suite, so captured
+kernels and synthetic workloads are characterized by one methodology.
+
+Each kernel package owns a ``capture.py`` hook that mirrors its
+``pallas_call`` geometry as a :class:`GridCapture` (see
+``repro.kernels.*.capture``); ``tests/test_capture.py`` cross-checks the
+mirrored constants against the jitted kernels when jax is importable.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+__all__ = [
+    "OperandSpec",
+    "GridCapture",
+    "CaptureResult",
+    "walk",
+    "WORDS_PER_FP32_PAIR",
+]
+
+# DAMOV traces address 8-byte words; the repo's kernels run fp32 (4 B), so
+# two elements share one word address.
+WORDS_PER_FP32_PAIR = 2
+
+_LINE_WORDS = 8  # 64 B cache line, for base-address alignment only
+
+
+@dataclass(frozen=True)
+class OperandSpec:
+    """One ``pl.BlockSpec`` of a kernel launch, as data.
+
+    ``index_map`` receives the grid indices (same signature as the Pallas
+    index map, minus scalar-prefetch refs, which hooks close over) and
+    returns the block index tuple.
+    """
+
+    name: str
+    role: str                       # "in" | "out"
+    shape: tuple[int, ...]          # logical array shape, elements
+    block_shape: tuple[int, ...]    # BlockSpec block shape, elements
+    index_map: Callable[..., tuple[int, ...]]
+    elems_per_word: int = WORDS_PER_FP32_PAIR
+
+    def __post_init__(self) -> None:
+        if self.role not in ("in", "out"):
+            raise ValueError(f"{self.name}: role must be 'in'|'out'")
+        if len(self.shape) != len(self.block_shape):
+            raise ValueError(
+                f"{self.name}: rank mismatch {self.shape} vs {self.block_shape}"
+            )
+        # Word collapse (`words[::elems_per_word]`) requires every row
+        # start to be word-aligned; row strides are multiples of the array
+        # last dim, so it must divide evenly (rank-1 operands are a single
+        # span and only need the block-level check in _tile_words).
+        if len(self.shape) > 1 and self.shape[-1] % self.elems_per_word:
+            raise ValueError(
+                f"{self.name}: array last dim {self.shape[-1]} not a "
+                f"multiple of {self.elems_per_word} elems/word")
+
+    @property
+    def words(self) -> int:
+        """Array footprint in 8-byte words."""
+        n = 1
+        for d in self.shape:
+            n *= d
+        return -(-n // self.elems_per_word)
+
+
+@dataclass(frozen=True)
+class GridCapture:
+    """Per-thread launch geometry of one kernel invocation."""
+
+    name: str
+    grid: tuple[int, ...]
+    operands: tuple[OperandSpec, ...]
+    flops: float = 0.0              # arithmetic ops of the whole launch
+
+
+@dataclass
+class CaptureResult:
+    """The captured HBM word-address stream + accounting."""
+
+    name: str
+    addresses: np.ndarray           # word addresses, issue order
+    loads: int
+    stores: int
+    footprint_words: int            # sum of operand array footprints
+    grid_steps: int
+    flops: float
+
+    @property
+    def refs(self) -> int:
+        # == addresses.size for a full walk; also correct for a
+        # count-only walk, whose address array is empty.
+        return self.loads + self.stores
+
+    @property
+    def flops_per_ref(self) -> float:
+        return self.flops / self.refs if self.refs else 0.0
+
+
+def _tile_words(op: OperandSpec, block_idx: tuple[int, ...],
+                base_word: int) -> np.ndarray:
+    """Word addresses of one block, row-major element order (DMA order)."""
+    shape, blk = op.shape, op.block_shape
+    # Row-major strides in elements.
+    strides = [1] * len(shape)
+    for i in range(len(shape) - 2, -1, -1):
+        strides[i] = strides[i + 1] * shape[i + 1]
+    # Element offsets of every row of the block along the last axis.
+    lead = [
+        np.arange(b) * s + i * b * s
+        for i, b, s, in zip(block_idx[:-1], blk[:-1], strides[:-1])
+    ]
+    starts = np.zeros(1, dtype=np.int64)
+    for axis in lead:
+        starts = (starts[:, None] + axis[None, :]).ravel()
+    last_b = blk[-1]
+    last_start = block_idx[-1] * last_b
+    if last_b % op.elems_per_word or last_start % op.elems_per_word:
+        raise ValueError(
+            f"{op.name}: block rows must be word-aligned "
+            f"(last dim {last_b} at offset {last_start}, "
+            f"{op.elems_per_word} elems/word)")
+    # Each row is a contiguous span of `last_b` elements; emit its words.
+    row = np.arange(last_start, last_start + last_b, dtype=np.int64)
+    elems = (starts[:, None] + row[None, :]).ravel()
+    words = elems // op.elems_per_word
+    # Collapse element-pairs sharing one word (fp32: stride-2 duplicates).
+    if op.elems_per_word > 1:
+        words = words[:: op.elems_per_word]
+    return base_word + words
+
+
+def walk(cap: GridCapture, *, count_only: bool = False) -> CaptureResult:
+    """Replay the pipeline schedule and emit the word-address stream.
+
+    Arrays are laid out back-to-back in HBM, line-aligned, in operand
+    order.  Per grid step (row-major order, last axis fastest — the Pallas
+    sequential iteration order): fetch every input block whose index map
+    output changed, then write back every output block whose residency ends
+    at this step.
+
+    ``count_only`` skips address materialization and returns only the
+    load/store/flop accounting (used to derive per-ref AI without paying
+    for megaword traces, e.g. by ``python -m repro.suite --list``).
+    """
+    base: dict[str, int] = {}
+    cursor = 0
+    for op in cap.operands:
+        if op.name not in base:
+            base[op.name] = cursor
+            cursor += -(-op.words // _LINE_WORDS) * _LINE_WORDS + _LINE_WORDS
+
+    def block_words(op: OperandSpec) -> int:
+        n = 1
+        for d in op.block_shape:
+            n *= d
+        return -(-n // op.elems_per_word)
+
+    steps = list(np.ndindex(*cap.grid))
+    chunks: list[np.ndarray] = []
+    loads = stores = 0
+    prev_idx: dict[str, tuple[int, ...] | None] = {
+        op.name: None for op in cap.operands
+    }
+    for si, step in enumerate(steps):
+        nxt = steps[si + 1] if si + 1 < len(steps) else None
+        for op in cap.operands:
+            bidx = tuple(int(x) for x in op.index_map(*step))
+            if op.role == "in":
+                if bidx != prev_idx[op.name]:
+                    if count_only:
+                        loads += block_words(op)
+                    else:
+                        w = _tile_words(op, bidx, base[op.name])
+                        chunks.append(w)
+                        loads += w.size
+            else:
+                nidx = (
+                    tuple(int(x) for x in op.index_map(*nxt))
+                    if nxt is not None else None
+                )
+                if nidx != bidx:  # residency ends here -> write back
+                    if count_only:
+                        stores += block_words(op)
+                    else:
+                        w = _tile_words(op, bidx, base[op.name])
+                        chunks.append(w)
+                        stores += w.size
+            prev_idx[op.name] = bidx
+
+    addr = (
+        np.concatenate(chunks)
+        if chunks else np.empty(0, dtype=np.int64)
+    )
+    footprint = sum({op.name: op.words for op in cap.operands}.values())
+    return CaptureResult(
+        name=cap.name,
+        addresses=addr.astype(np.int64, copy=False),
+        loads=loads,
+        stores=stores,
+        footprint_words=footprint,
+        grid_steps=len(steps),
+        flops=cap.flops,
+    )

@@ -1,0 +1,243 @@
+"""Captured Pallas-kernel workloads: real launch geometry -> ``Workload``.
+
+Each entry here runs a kernel capture hook
+(``repro.kernels.*.capture.capture``) through the grid walker and wraps the
+resulting HBM word-address stream as a :class:`repro.core.tracegen.Workload`
+— the same record the synthetic families produce — so captured kernels flow
+through the unchanged Step-2/Step-3 pipeline (locality, cache simulation,
+classification, scalability).
+
+Modeling notes:
+
+- Traces are *per-thread*: the capture hooks partition the kernel's grid
+  the way the kernel is actually parallelized (row tiles for STREAM, index
+  slices for gather, q- or kv-splits for attention).
+- Per-thread traces are length-normalized to ``target_refs`` by cycling
+  (``np.resize``), modeling steady-state repeated invocation — the same
+  convention the synthetic generators use (fixed trace length per core
+  count).
+- AI / instructions-per-access come from the capture's arithmetic-op count
+  over its reference (1-core) stream, so the roster's AI column reflects
+  the kernel's real op:byte ratio.
+- Expected classes follow the DAMOV decision procedure applied to the DMA
+  word stream.  STREAM and token-gather land in Class 1a exactly as the
+  paper's STREAM/irregular archetypes do.  Flash attention's *word* stream
+  has no sub-window reuse (tiles revisit at >=128 KiB distances, far beyond
+  the Eq.-2 window of 32 refs), so despite 2c-scale arithmetic intensity it
+  stays on the low-temporal branch: the shared-KV variant (KV streamed each
+  invocation, MPKI tiny because AI is enormous) profiles as 1b, and the
+  kv-split variant (per-core KV chunk shrinks with cores until it fits the
+  private L2, so LFMR collapses) profiles as 1c.  The roster's AI column
+  keeps the compute-boundedness visible.
+
+Everything is deterministic: indices come from the crc32-seeded workload
+rng, there is no wall clock, and no TPU (or jax) is required.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+from repro.core.tracegen import TraceSpec, Workload
+from repro.kernels.flash_attention import capture as flash_capture
+from repro.kernels.stream import capture as stream_capture
+from repro.kernels.token_gather import capture as gather_capture
+
+from .grid import GridCapture, walk
+
+__all__ = ["CapturedKernel", "CAPTURED_KERNELS", "captured_workloads"]
+
+
+@dataclass(frozen=True)
+class CapturedKernel:
+    """Declaration of one captured-kernel suite entry."""
+
+    name: str
+    kernel: str                 # source kernel ("stream" | "gather" | "flashattn")
+    domain: str
+    expected_class: str
+    target_refs: int            # per-thread trace length after cycling/trim
+    l3_shared: bool             # True -> l3_factor 1.0; False -> 1/cores
+    mlp: float
+    dram_rows_irregular: bool
+    instr_overhead: float       # instructions per ref beyond arithmetic ops
+    builder: Callable[[int, np.random.Generator], GridCapture]
+    # The builder's problem geometry, verbatim.  Part of params() and thus
+    # of the suite-store fingerprint: a geometry edit must invalidate
+    # stored rows even when it leaves name/AI/target_refs unchanged.
+    geometry: tuple[tuple[str, object], ...] = ()
+
+    def params(self) -> dict:
+        return {
+            "kernel": self.kernel,
+            "target_refs": self.target_refs,
+            "l3": "shared" if self.l3_shared else "partitioned",
+            "mlp": self.mlp,
+            **dict(self.geometry),
+        }
+
+
+def _stream_builder(op: str, n_elems: int):
+    def build(cores: int, rng: np.random.Generator) -> GridCapture:
+        del rng  # STREAM is index-free
+        return stream_capture.capture(op, n_elems, cores=cores)
+    return build
+
+
+def _gather_builder(n_rows: int, d: int, m: int):
+    def build(cores: int, rng: np.random.Generator) -> GridCapture:
+        del cores  # thread-private slice of the global index stream
+        return gather_capture.capture(n_rows, d, m, rng=rng)
+    return build
+
+
+def _flash_builder(sq: int, sk: int, d: int, partition: str):
+    def build(cores: int, rng: np.random.Generator) -> GridCapture:
+        del rng  # dense attention: no data-dependent addressing
+        return flash_capture.capture(
+            sq=sq, sk=sk, d=d, cores=cores, partition=partition)
+    return build
+
+
+def _stream_entries() -> list[CapturedKernel]:
+    out = []
+    for op in ("copy", "scale", "add", "triad"):
+        for tag, n_elems in (("1MiB", 2**18), ("2MiB", 2**19)):
+            geo = dict(op=op, n_elems=n_elems)
+            out.append(CapturedKernel(
+                name=f"pal.stream.{op}.{tag}",
+                kernel="stream",
+                domain="TPU-kernel/streaming",
+                expected_class="1a",
+                target_refs=0,  # 0 -> keep the raw captured stream
+                l3_shared=True,
+                mlp=8.0,
+                dram_rows_irregular=False,
+                instr_overhead=2.0,
+                builder=_stream_builder(**geo),
+                geometry=tuple(sorted(geo.items())),
+            ))
+    return out
+
+
+_GEO_GATHER_BIG = dict(n_rows=65536, d=128, m=2048)
+_GEO_GATHER_WIDE = dict(n_rows=16384, d=256, m=1024)
+
+
+def _gather_entries() -> list[CapturedKernel]:
+    return [
+        CapturedKernel(
+            name="pal.gather.64kx128",
+            kernel="gather",
+            domain="TPU-kernel/sparse",
+            expected_class="1a",
+            target_refs=0,
+            l3_shared=True,
+            mlp=6.0,
+            dram_rows_irregular=True,
+            instr_overhead=3.0,
+            builder=_gather_builder(**_GEO_GATHER_BIG),
+            geometry=tuple(sorted(_GEO_GATHER_BIG.items())),
+        ),
+        CapturedKernel(
+            name="pal.gather.16kx256",
+            kernel="gather",
+            domain="TPU-kernel/sparse",
+            expected_class="1a",
+            target_refs=0,
+            l3_shared=True,
+            mlp=6.0,
+            dram_rows_irregular=True,
+            instr_overhead=3.0,
+            builder=_gather_builder(**_GEO_GATHER_WIDE),
+            geometry=tuple(sorted(_GEO_GATHER_WIDE.items())),
+        ),
+    ]
+
+
+_GEO_FLASH_1B = dict(sq=256, sk=2048, d=128, partition="q")
+_GEO_FLASH_1C = dict(sq=256, sk=20480, d=64, partition="kv")
+
+
+def _flash_entries() -> list[CapturedKernel]:
+    return [
+        # Shared-KV (q-partitioned): KV streamed per invocation at reuse
+        # distances beyond every cache a thread can hold -> latency-class 1b
+        # (tiny MPKI: the kernel retires ~500 arithmetic ops per word).
+        CapturedKernel(
+            name="pal.flashattn.d128.kv2k",
+            kernel="flashattn",
+            domain="TPU-kernel/attention",
+            expected_class="1b",
+            target_refs=300_000,
+            l3_shared=True,
+            mlp=4.0,
+            dram_rows_irregular=False,
+            instr_overhead=2.0,
+            builder=_flash_builder(**_GEO_FLASH_1B),
+            geometry=tuple(sorted(_GEO_FLASH_1B.items())),
+        ),
+        # kv-split (flash-decoding): the per-core KV chunk shrinks with the
+        # core count until it fits the private L2 -> LFMR collapses -> 1c.
+        CapturedKernel(
+            name="pal.flashattn.d64.kv20k",
+            kernel="flashattn",
+            domain="TPU-kernel/attention",
+            expected_class="1c",
+            target_refs=600_000,
+            l3_shared=False,
+            mlp=4.0,
+            dram_rows_irregular=False,
+            instr_overhead=2.0,
+            builder=_flash_builder(**_GEO_FLASH_1C),
+            geometry=tuple(sorted(_GEO_FLASH_1C.items())),
+        ),
+    ]
+
+
+CAPTURED_KERNELS: tuple[CapturedKernel, ...] = tuple(
+    _stream_entries() + _gather_entries() + _flash_entries()
+)
+
+
+def _make_gen(spec: CapturedKernel):
+    def gen(cores: int, rng: np.random.Generator) -> TraceSpec:
+        res = walk(spec.builder(cores, rng))
+        addr = res.addresses
+        if spec.target_refs and addr.size != spec.target_refs:
+            addr = np.resize(addr, spec.target_refs)
+        return TraceSpec(
+            addresses=addr,
+            l3_factor=1.0 if spec.l3_shared else 1.0 / max(1, cores),
+            mlp=spec.mlp,
+            dram_rows_irregular=spec.dram_rows_irregular,
+        )
+    return gen
+
+
+def captured_workloads(
+    specs: tuple[CapturedKernel, ...] = CAPTURED_KERNELS,
+) -> list[Workload]:
+    """Wrap every captured kernel as a pipeline-ready ``Workload``.
+
+    AI is derived from the capture's own op count over its 1-core stream
+    (deterministic: the reference walk uses a fixed rng stream).
+    """
+    out: list[Workload] = []
+    for spec in specs:
+        # Count-only walk: AI needs just the op/ref ratio, not the trace.
+        ref = walk(spec.builder(1, np.random.default_rng(0)),
+                   count_only=True)
+        ai = round(ref.flops_per_ref, 3)
+        out.append(Workload(
+            name=spec.name,
+            family=f"pallas-{spec.kernel}",
+            expected_class=spec.expected_class,
+            ai_ops_per_access=ai,
+            instr_per_access=round(ai + spec.instr_overhead, 3),
+            gen=_make_gen(spec),
+        ))
+    return out

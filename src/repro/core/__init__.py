@@ -18,7 +18,6 @@ consumer) — prefer it for anything that touches more than one module.
 """
 
 from . import (  # noqa: F401
-    analytic,
     cachesim,
     casestudies,
     classify,
@@ -30,8 +29,17 @@ from . import (  # noqa: F401
     tracegen,
 )
 
-__all__ = [
-    "analytic",
+try:
+    from . import analytic  # noqa: F401  (pulls repro.models -> jax)
+    _HAVE_ANALYTIC = True
+except ImportError as e:
+    # jax absent: the trace/suite/capture path stays fully importable;
+    # `from repro.core import analytic` raises at the (hlo) use site.
+    if not (e.name or "").startswith("jax"):
+        raise  # a real break in analytic/models must not be masked
+    _HAVE_ANALYTIC = False
+
+__all__ = (["analytic"] if _HAVE_ANALYTIC else []) + [
     "cachesim",
     "casestudies",
     "classify",

@@ -1,4 +1,11 @@
-"""Synthetic DAMOV workload families (stand-in for the 144-function suite).
+"""Synthetic DAMOV workload families: the seven access-pattern archetypes.
+
+These generators are the *synthetic half* of the repo's benchmark suite:
+:mod:`repro.suite` expands them into parameterized roster entries
+(footprint / stride / reuse-depth grids) and registers them alongside the
+*captured half* — real Pallas-kernel DMA traces from :mod:`repro.capture`
+— so both sources are characterized by one methodology
+(``python -m repro.suite`` emits the combined Table-3-style roster).
 
 Each :class:`Workload` is a parameterized generator of per-thread word-address
 traces mirroring one access-pattern archetype from the paper's Appendix A.

@@ -1,0 +1,67 @@
+"""Capture hook: flash-attention launch geometry as a :class:`GridCapture`.
+
+Mirrors ``kernel.py``'s ``pallas_call``: grid ``(bh, n_q, n_kv)`` with the
+kv axis innermost, q/o blocks ``(1, bq, d)`` mapped on ``qi`` (so the
+pipeline re-fetches q only when ``qi`` changes and writes o once per q
+tile), and k/v blocks ``(1, bk, d)`` mapped on ``ki`` (re-fetched every kv
+step).  ``pl.when``-skipped causal tiles still DMA (the guard gates
+compute, not the automatic pipeline copies), so capture models the
+non-causal schedule.
+
+Two strong-scaling partitions, matching how multi-core attention is
+actually decomposed:
+
+- ``partition="q"``  — query tiles are split across cores; K/V are read by
+  every core (shared data -> ``l3_factor`` 1.0 upstream).
+- ``partition="kv"`` — the KV sequence is split flash-decoding style; each
+  core sweeps its private chunk for every query tile (disjoint data ->
+  ``l3_factor`` ~ 1/cores upstream).
+"""
+
+from __future__ import annotations
+
+from repro.capture.grid import GridCapture, OperandSpec
+
+__all__ = ["capture"]
+
+# Softmax/online-update vector ops per score element (exp, max, scale, two
+# fused multiply-adds) on top of the two bq x bk x d matmuls.
+_SOFTMAX_OPS_PER_SCORE = 6.0
+
+
+def capture(*, sq: int, sk: int, d: int, bq: int = 128, bk: int = 128,
+            cores: int = 1, partition: str = "q") -> GridCapture:
+    """Per-thread geometry for one head of flash attention."""
+    if sq % bq or sk % bk:
+        raise ValueError(f"seq lens {(sq, sk)} not multiples of {(bq, bk)}")
+    n_q, n_kv = sq // bq, sk // bk
+    if partition == "q":
+        n_q = max(1, n_q // max(1, cores))
+    elif partition == "kv":
+        n_kv = max(1, n_kv // max(1, cores))
+    else:
+        raise ValueError(f"partition must be 'q'|'kv', got {partition!r}")
+    sq_t, sk_t = n_q * bq, n_kv * bk
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        return (bh, ki, 0)
+
+    qo = dict(shape=(1, sq_t, d), block_shape=(1, bq, d), index_map=q_map)
+    kv = dict(shape=(1, sk_t, d), block_shape=(1, bk, d), index_map=kv_map)
+
+    steps = n_q * n_kv
+    flops = steps * (4.0 * bq * bk * d + _SOFTMAX_OPS_PER_SCORE * bq * bk)
+    return GridCapture(
+        name="flash_attention",
+        grid=(1, n_q, n_kv),
+        operands=(
+            OperandSpec(name="q", role="in", **qo),
+            OperandSpec(name="k", role="in", **kv),
+            OperandSpec(name="v", role="in", **kv),
+            OperandSpec(name="o", role="out", **qo),
+        ),
+        flops=flops,
+    )

@@ -1,0 +1,69 @@
+"""Capture hook: STREAM kernel launch geometry as a :class:`GridCapture`.
+
+Mirrors ``kernel.py``'s ``pallas_call`` exactly — grid ``(rows //
+block_rows,)``, array blocks ``(block_rows, LANES)`` with index map
+``i -> (i, 0)``, scalar operands broadcast from block ``(1,)`` — but as
+plain data, importable without jax (``tests/test_capture.py`` cross-checks
+the mirrored constants against ``kernel.py`` when jax is present).
+
+Strong scaling follows the kernel's natural parallelization: the row-tile
+grid is partitioned across cores, so a thread's capture is the launch over
+its ``n_elems / cores`` slice (at least one tile).  STREAM has no reuse,
+so the per-thread stream is the whole story.
+"""
+
+from __future__ import annotations
+
+from repro.capture.grid import GridCapture, OperandSpec
+
+__all__ = ["capture", "STREAM_OPS", "LANES", "DEFAULT_BLOCK_ROWS"]
+
+# Mirrors repro.kernels.stream.kernel (kept jax-free on purpose).
+LANES = 128
+DEFAULT_BLOCK_ROWS = 512
+
+# op -> (input operand names, arithmetic ops per output element)
+STREAM_OPS: dict[str, tuple[tuple[str, ...], float]] = {
+    "copy": (("a",), 0.0),
+    "scale": (("q", "a"), 1.0),
+    "add": (("a", "b"), 1.0),
+    "triad": (("q", "a", "b"), 2.0),
+}
+
+
+def capture(op: str, n_elems: int, *, cores: int = 1,
+            block_rows: int = DEFAULT_BLOCK_ROWS) -> GridCapture:
+    """Per-thread launch geometry for one STREAM op over ``n_elems``."""
+    if op not in STREAM_OPS:
+        raise ValueError(f"unknown stream op {op!r}; expected {set(STREAM_OPS)}")
+    inputs, ops_per_elem = STREAM_OPS[op]
+    tile_elems = block_rows * LANES
+    if n_elems % tile_elems:
+        raise ValueError(f"n_elems {n_elems} not a multiple of {tile_elems}")
+    n_thread = max(tile_elems, n_elems // max(1, cores) // tile_elems * tile_elems)
+    rows = n_thread // LANES
+    grid = (rows // block_rows,)
+
+    def arr(name: str, role: str) -> OperandSpec:
+        return OperandSpec(
+            name=name, role=role, shape=(rows, LANES),
+            block_shape=(block_rows, LANES), index_map=lambda i: (i, 0),
+        )
+
+    operands: list[OperandSpec] = []
+    for name in inputs:
+        if name == "q":  # broadcast scalar: fetched once (index map constant)
+            operands.append(OperandSpec(
+                name="q", role="in", shape=(1,), block_shape=(1,),
+                index_map=lambda i: (0,), elems_per_word=1,
+            ))
+        else:
+            operands.append(arr(name, "in"))
+    operands.append(arr("o", "out"))
+
+    return GridCapture(
+        name=f"stream_{op}",
+        grid=grid,
+        operands=tuple(operands),
+        flops=ops_per_elem * n_thread,
+    )

@@ -1,0 +1,51 @@
+"""Capture hook: token-gather launch geometry as a :class:`GridCapture`.
+
+Mirrors ``kernel.py``'s ``PrefetchScalarGridSpec`` launch: the index
+vector is scalar-prefetched once (a constant index map — the walker emits
+its words a single time, at grid start), then each grid step ``i`` DMAs
+row block ``table[idx[i]]`` in and output row ``i`` out.
+
+Per-thread view: each core gathers its own slice of the global index
+stream, so a thread's capture is simply ``m`` gathered rows with
+thread-private random indices over the *shared* table (the synthetic
+``irregular`` family makes the same modeling choice).  ``rng`` supplies the
+indices, so the trace is deterministic per (workload, seed).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.capture.grid import GridCapture, OperandSpec
+
+__all__ = ["capture"]
+
+
+def capture(n_rows: int, d: int, m: int, *,
+            rng: np.random.Generator) -> GridCapture:
+    """Per-thread geometry: gather ``m`` of ``n_rows`` rows of width ``d``."""
+    if d % 128:
+        raise ValueError(f"d {d} must be a multiple of 128 (lane dim)")
+    idx = rng.integers(0, n_rows, size=m, dtype=np.int64)
+
+    return GridCapture(
+        name="token_gather",
+        grid=(m,),
+        operands=(
+            # int32 indices, scalar-prefetched once before the grid runs.
+            OperandSpec(
+                name="idx", role="in", shape=(m,), block_shape=(m,),
+                index_map=lambda i: (0,), elems_per_word=2,
+            ),
+            OperandSpec(
+                name="table", role="in", shape=(n_rows, d),
+                block_shape=(1, d),
+                index_map=lambda i, _idx=idx: (int(_idx[i]), 0),
+            ),
+            OperandSpec(
+                name="out", role="out", shape=(m, d), block_shape=(1, d),
+                index_map=lambda i: (i, 0),
+            ),
+        ),
+        flops=0.0,  # pure data movement
+    )

@@ -16,6 +16,9 @@ Examples::
 
     # the TPU backend: per-(arch x shape x mesh) roofline classes
     python -m repro.study --substrate hlo --format csv
+
+    # the registered benchmark suite (synthetic + captured Pallas kernels)
+    python -m repro.study --substrate suite --refs 20000
 """
 
 from __future__ import annotations
@@ -27,6 +30,7 @@ from repro.core.cachesim import BACKENDS
 from repro.core.sweep import CORE_SWEEP
 from repro.core.tracegen import DEFAULT_REFS
 
+from .cliutil import emit_tables, parse_cores
 from .result import StudyResult
 from .study import Study
 from .substrate import get_substrate
@@ -34,21 +38,16 @@ from .substrate import get_substrate
 SECTIONS = ("characterize", "metrics", "classify", "scalability", "energy")
 
 
-def _parse_cores(text: str) -> tuple[int, ...]:
-    cores = tuple(int(x) for x in text.split(",") if x)
-    if not cores:
-        raise argparse.ArgumentTypeError("need at least one core count")
-    return cores
-
-
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
         prog="python -m repro.study",
         description="Unified DAMOV characterization pipeline",
     )
-    ap.add_argument("--substrate", choices=("trace", "hlo"), default="trace",
-                    help="trace-driven cache simulation or compiled-XLA "
-                         "roofline backend")
+    ap.add_argument("--substrate", choices=("trace", "hlo", "suite"),
+                    default="trace",
+                    help="trace-driven cache simulation, compiled-XLA "
+                         "roofline backend, or the registered benchmark "
+                         "suite (synthetic + captured Pallas kernels)")
     ap.add_argument("--backend", choices=BACKENDS, default=None,
                     help="cache-simulation implementation (trace substrate); "
                          "default: $REPRO_SIM_BACKEND or 'vectorized'")
@@ -59,7 +58,7 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--suite-seed", type=int, default=0,
                     help="suite-generation (jitter) seed")
     ap.add_argument("--seed", type=int, default=0, help="trace seed")
-    ap.add_argument("--cores", type=_parse_cores, default=CORE_SWEEP,
+    ap.add_argument("--cores", type=parse_cores, default=CORE_SWEEP,
                     metavar="1,4,16,...", help="core sweep")
     ap.add_argument("--workloads", default=None,
                     metavar="NAME[,NAME...]",
@@ -97,9 +96,31 @@ def _trace_tables(study: Study, sections: list[str]) -> list[StudyResult]:
 def main(argv: list[str] | None = None) -> int:
     args = build_parser().parse_args(argv)
 
+    trace_only = {"--sections": args.sections != "characterize",
+                  "--workloads": bool(args.workloads),
+                  "--variants": args.variants != 1,
+                  "--suite-seed": args.suite_seed != 0}
+    if args.substrate != "trace" and any(trace_only.values()):
+        # These flags shape the trace pipeline only; silently emitting the
+        # default table instead would mislead the caller.
+        bad = ", ".join(k for k, v in trace_only.items() if v)
+        raise SystemExit(
+            f"error: {bad} applies to the trace substrate; the "
+            f"{args.substrate!r} substrate always emits its "
+            f"characterization table")
+
     if args.substrate == "hlo":
         tables = [get_substrate("hlo").characterize()]
         stats = None
+    elif args.substrate == "suite":
+        from repro.study.substrate import SuiteSubstrate
+        from repro.suite import ResultStore, SuiteRunner, default_registry
+
+        runner = SuiteRunner(default_registry(refs=args.refs),
+                             seed=args.seed, cores=args.cores,
+                             backend=args.backend, store=ResultStore())
+        tables = [SuiteSubstrate(runner=runner).characterize()]
+        stats = runner.study.stats
     else:
         study = Study(refs=args.refs, variants=args.variants,
                       suite_seed=args.suite_seed, seed=args.seed,
@@ -115,17 +136,7 @@ def main(argv: list[str] | None = None) -> int:
         tables = _trace_tables(study, sections)
         stats = study.stats
 
-    if args.format == "json":
-        import json
-        text = json.dumps([t.to_dict() for t in tables], indent=2)
-    else:
-        text = "\n".join(f"## {t.name}\n{t.to_csv()}" for t in tables)
-
-    if args.out:
-        with open(args.out, "w") as f:
-            f.write(text + "\n")
-    else:
-        sys.stdout.write(text + "\n")
+    emit_tables(tables, fmt=args.format, out=args.out)
 
     if args.stats and stats is not None:
         print(f"# engine: {stats.as_dict()}", file=sys.stderr)

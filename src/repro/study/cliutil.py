@@ -1,0 +1,35 @@
+"""Shared CLI plumbing for the ``repro.study`` / ``repro.suite`` entry
+points: core-sweep parsing and table emission, so the two front ends
+cannot drift apart."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .result import StudyResult
+
+__all__ = ["parse_cores", "emit_tables"]
+
+
+def parse_cores(text: str) -> tuple[int, ...]:
+    """argparse type for ``--cores 1,4,16``."""
+    cores = tuple(int(x) for x in text.split(",") if x)
+    if not cores:
+        raise argparse.ArgumentTypeError("need at least one core count")
+    return cores
+
+
+def emit_tables(tables: list[StudyResult], *, fmt: str,
+                out: str | None) -> None:
+    """Write tables as CSV sections or a JSON array, to ``out`` or stdout."""
+    if fmt == "json":
+        import json
+        text = json.dumps([t.to_dict() for t in tables], indent=2)
+    else:
+        text = "\n".join(f"## {t.name}\n{t.to_csv()}" for t in tables)
+    if out:
+        with open(out, "w") as f:
+            f.write(text + "\n")
+    else:
+        sys.stdout.write(text + "\n")

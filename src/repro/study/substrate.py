@@ -11,9 +11,13 @@ substrate      evidence
 ``hlo``        compiled-XLA cost terms (``repro.core.hlo_analysis`` +
                ``repro.core.analytic``): compute / HBM / collective
                roofline -> compute | hbm | collective | latency classes
+``suite``      the registered benchmark roster (``repro.suite``): synthetic
+               family expansions + captured Pallas-kernel DMA traces,
+               characterized like ``trace`` and persisted to the
+               content-addressed result store
 =============  ===========================================================
 
-Both implement the :class:`Substrate` protocol — ``characterize()`` returns
+All implement the :class:`Substrate` protocol — ``characterize()`` returns
 a columnar :class:`~repro.study.result.StudyResult` whose rows always start
 with ``(name, class)`` — so callers (the ``python -m repro.study`` CLI, the
 benchmark driver) can swap backends with a flag.
@@ -26,7 +30,8 @@ from typing import Protocol, runtime_checkable
 from .result import StudyResult
 from .study import Study
 
-__all__ = ["Substrate", "TraceSubstrate", "HloSubstrate", "get_substrate"]
+__all__ = ["Substrate", "TraceSubstrate", "HloSubstrate", "SuiteSubstrate",
+           "get_substrate"]
 
 
 @runtime_checkable
@@ -136,10 +141,54 @@ class HloSubstrate:
         return res
 
 
-def get_substrate(name: str, *, study: Study | None = None) -> Substrate:
-    """Factory behind the ``--substrate trace|hlo`` CLI flag."""
+class SuiteSubstrate:
+    """The registered benchmark roster (synthetic + captured Pallas-kernel
+    workloads) as a substrate: one row per suite entry, rows starting with
+    (name, class), metrics identical to the ``trace`` path.
+
+    ``repro.suite`` imports are deferred to call time so importing this
+    module stays cheap; pass ``runner`` to share an existing engine/store.
+    By default a self-built runner persists to the default result store
+    (matching ``python -m repro.suite``); pass ``store=None`` for pure
+    compute.
+    """
+
+    name = "suite"
+
+    _DEFAULT_STORE = object()
+
+    def __init__(self, *, runner=None, refs: int | None = None,
+                 store=_DEFAULT_STORE):
+        if runner is None:
+            from repro.suite import ResultStore, SuiteRunner, default_registry
+            if store is self._DEFAULT_STORE:
+                store = ResultStore()
+            runner = SuiteRunner(default_registry(refs=refs), store=store)
+        self.runner = runner
+
+    def items(self) -> list[str]:
+        return [e.name for e in self.runner.registry]
+
+    def characterize(self) -> StudyResult:
+        roster = self.runner.roster()
+        cols = ("name", "class") + tuple(
+            c for c in roster.columns if c not in ("name", "assigned"))
+        res = StudyResult("suite_characterization", cols)
+        idx = [roster.columns.index(c if c != "class" else "assigned")
+               for c in cols]
+        for row in roster:
+            res.append(tuple(row[i] for i in idx))
+        return res
+
+
+def get_substrate(name: str, *, study: Study | None = None,
+                  refs: int | None = None) -> Substrate:
+    """Factory behind the ``--substrate trace|hlo|suite`` CLI flag."""
     if name == "trace":
         return TraceSubstrate(study if study is not None else Study())
     if name == "hlo":
         return HloSubstrate()
-    raise ValueError(f"unknown substrate {name!r}; expected 'trace' or 'hlo'")
+    if name == "suite":
+        return SuiteSubstrate(refs=refs)
+    raise ValueError(
+        f"unknown substrate {name!r}; expected 'trace', 'hlo' or 'suite'")

@@ -1,0 +1,29 @@
+"""``repro.suite`` — the benchmark-suite registry and sharded runner.
+
+The suite subsystem binds the two halves of the repo together: the seven
+synthetic DAMOV access-pattern families (expanded into parameter grids)
+and the real Pallas kernels (captured as HBM DMA word streams by
+:mod:`repro.capture`) registered as one roster, characterized by one
+methodology, with a content-addressed on-disk result store and a
+``python -m repro.suite`` CLI emitting the Table-3-style roster.
+"""
+
+from .registry import (  # noqa: F401
+    SUITE_SCHEMA,
+    SuiteEntry,
+    SuiteRegistry,
+    default_registry,
+)
+from .runner import ROSTER_COLUMNS, SuiteRunner  # noqa: F401
+from .store import ResultStore, default_store_root  # noqa: F401
+
+__all__ = [
+    "SuiteEntry",
+    "SuiteRegistry",
+    "default_registry",
+    "SuiteRunner",
+    "ResultStore",
+    "default_store_root",
+    "ROSTER_COLUMNS",
+    "SUITE_SCHEMA",
+]

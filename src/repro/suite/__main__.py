@@ -1,0 +1,112 @@
+"""CLI entry point: ``python -m repro.suite``.
+
+Characterizes the registered benchmark suite — synthetic family expansions
+plus captured Pallas-kernel traces — and emits the Table-3-style roster
+(name, domain, source, metrics, assigned vs expected class) with a
+per-class histogram.
+
+Examples::
+
+    # full roster, CSV to stdout (results persisted to the default store)
+    python -m repro.suite
+
+    # CI smoke: short synthetic traces, fail on captured-class divergence
+    python -m repro.suite --fast --check --out roster.csv
+
+    # JSON, custom store location, engine stats
+    python -m repro.suite --format json --store /tmp/suite-store --stats
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.core.cachesim import BACKENDS
+from repro.core.sweep import CORE_SWEEP
+from repro.core.tracegen import DEFAULT_REFS
+from repro.study.cliutil import emit_tables, parse_cores
+
+from .registry import default_registry
+from .runner import SuiteRunner
+from .store import ResultStore, default_store_root
+
+FAST_REFS = 20_000
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.suite",
+        description="DAMOV benchmark-suite roster: synthetic + captured "
+                    "Pallas-kernel workloads under one methodology",
+    )
+    ap.add_argument("--fast", action="store_true",
+                    help=f"short synthetic traces ({FAST_REFS} refs; "
+                         "captured traces keep their real lengths)")
+    ap.add_argument("--refs", type=int, default=None,
+                    help="synthetic trace length "
+                         f"(default {DEFAULT_REFS}, --fast {FAST_REFS})")
+    ap.add_argument("--seed", type=int, default=0, help="trace seed")
+    ap.add_argument("--cores", type=parse_cores, default=CORE_SWEEP,
+                    metavar="1,4,16,...", help="core sweep")
+    ap.add_argument("--backend", choices=BACKENDS, default=None,
+                    help="cache-simulation implementation; default: "
+                         "$REPRO_SIM_BACKEND or 'vectorized'")
+    ap.add_argument("--store", default=None, metavar="DIR",
+                    help="result-store root (default $REPRO_SUITE_STORE "
+                         f"or {default_store_root()})")
+    ap.add_argument("--no-store", action="store_true",
+                    help="do not read or write the on-disk result store")
+    ap.add_argument("--list", action="store_true",
+                    help="print the roster entries without simulating")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 2 if any captured kernel's assigned class "
+                         "diverges from its expected class")
+    ap.add_argument("--format", choices=("csv", "json"), default="csv")
+    ap.add_argument("--out", default=None,
+                    help="output path (default: stdout)")
+    ap.add_argument("--stats", action="store_true",
+                    help="print store/engine hit-miss stats to stderr")
+    return ap
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    refs = args.refs if args.refs is not None else (
+        FAST_REFS if args.fast else DEFAULT_REFS)
+
+    registry = default_registry(refs=refs)
+
+    if args.list:
+        for e in registry:
+            params = ", ".join(f"{k}={v}" for k, v in e.params)
+            print(f"{e.name:28s} {e.source:9s} {e.domain:24s} "
+                  f"expected={e.expected_class}  [{params}]")
+        print(f"# {len(registry)} entries "
+              f"({len(registry.by_source('synthetic'))} synthetic, "
+              f"{len(registry.by_source('captured'))} captured)")
+        return 0
+
+    store = None if args.no_store else ResultStore(args.store)
+    runner = SuiteRunner(registry, seed=args.seed, cores=args.cores,
+                         backend=args.backend, store=store)
+    tables = [runner.roster(), runner.histogram()]
+    emit_tables(tables, fmt=args.format, out=args.out)
+
+    if args.stats:
+        print(f"# store: {runner.stats.as_dict()} "
+              f"engine: {runner.study.stats.as_dict()}", file=sys.stderr)
+
+    if args.check:
+        bad = runner.divergent(source="captured")
+        if bad:
+            for rec in bad:
+                print(f"# DIVERGENT captured entry {rec['name']}: "
+                      f"assigned {rec['assigned']} != expected "
+                      f"{rec['expected']}", file=sys.stderr)
+            return 2
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,193 @@
+"""Benchmark-suite registry: many workloads, two sources, one record type.
+
+DAMOV's core artifact is its *suite* (144 functions spanning many domains,
+characterized by one methodology, §4 / Table 3).  This registry is that
+idea at repo scale: a :class:`SuiteEntry` per workload — synthetic
+(parameterized expansions of the seven access-pattern families in
+:mod:`repro.core.tracegen`) or captured (real Pallas-kernel DMA streams
+from :mod:`repro.capture`) — with the domain / source / expected-class /
+parameter metadata the Table-3-style roster reports.
+
+:func:`default_registry` builds the standard roster: a footprint /
+stride / reuse-depth grid over every synthetic family (three points per
+family, chosen inside the jitter envelope the §3.5 validation sweep
+exercises) plus every captured kernel — 33 entries.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import dataclass, field
+from typing import Iterator
+
+from repro.capture import CAPTURED_KERNELS, captured_workloads
+from repro.core import tracegen
+from repro.core.tracegen import Workload
+
+__all__ = ["SuiteEntry", "SuiteRegistry", "default_registry", "SUITE_SCHEMA"]
+
+# Bumped whenever capture geometry or roster methodology changes in a way
+# that invalidates stored results.
+SUITE_SCHEMA = 1
+
+_L1_WORDS = 32 * 1024 // 8
+_MiB_WORDS = 2**20 // 8
+
+
+@dataclass(frozen=True)
+class SuiteEntry:
+    """One registered workload + its Table-3 metadata."""
+
+    workload: Workload
+    domain: str
+    source: str                              # "synthetic" | "captured"
+    params: tuple[tuple[str, object], ...]   # sorted (key, value) pairs
+
+    def __post_init__(self) -> None:
+        if self.source not in ("synthetic", "captured"):
+            raise ValueError(f"source must be synthetic|captured, "
+                             f"got {self.source!r}")
+
+    @property
+    def name(self) -> str:
+        return self.workload.name
+
+    @property
+    def expected_class(self) -> str:
+        return self.workload.expected_class
+
+    def fingerprint(self, *, seed: int, cores: tuple[int, ...],
+                    backend: str = "vectorized") -> str:
+        """Content address of this entry's characterization record.
+
+        ``backend`` is part of the key even though the two cachesim
+        implementations are counter-identical by contract: an explicit
+        ``--backend reference`` cross-check must actually *run* the
+        reference loop, not recall the vectorized rows from the store.
+        """
+        payload = {
+            "schema": SUITE_SCHEMA,
+            "name": self.name,
+            "source": self.source,
+            "domain": self.domain,
+            "expected": self.expected_class,
+            "params": [[k, repr(v)] for k, v in self.params],
+            "ai": self.workload.ai_ops_per_access,
+            "ipa": self.workload.instr_per_access,
+            "seed": seed,
+            "cores": list(cores),
+            "backend": backend,
+        }
+        blob = json.dumps(payload, sort_keys=True).encode()
+        return hashlib.sha256(blob).hexdigest()
+
+
+@dataclass
+class SuiteRegistry:
+    """Ordered, name-unique collection of suite entries."""
+
+    entries: list[SuiteEntry] = field(default_factory=list)
+
+    def register(self, workload: Workload, *, domain: str, source: str,
+                 **params: object) -> SuiteEntry:
+        if any(e.name == workload.name for e in self.entries):
+            raise ValueError(f"suite entry {workload.name!r} already "
+                             f"registered")
+        entry = SuiteEntry(
+            workload=workload, domain=domain, source=source,
+            params=tuple(sorted(params.items())),
+        )
+        self.entries.append(entry)
+        return entry
+
+    def __iter__(self) -> Iterator[SuiteEntry]:
+        return iter(self.entries)
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def workloads(self) -> list[Workload]:
+        return [e.workload for e in self.entries]
+
+    def by_source(self, source: str) -> list[SuiteEntry]:
+        return [e for e in self.entries if e.source == source]
+
+
+# --------------------------------------------------------------------------
+# The synthetic expansion: three parameter points per family, inside the
+# envelope make_suite's jitter covers (so the family's class is preserved).
+# --------------------------------------------------------------------------
+def _synthetic_grid(refs: int) -> list[tuple[Workload, dict]]:
+    out: list[tuple[Workload, dict]] = []
+
+    def add(name: str, family: str, ai: float, ipa: float, gen, **params):
+        out.append((
+            Workload(name, family, tracegen.FAMILIES[family], ai, ipa, gen),
+            dict(params, refs=refs),
+        ))
+
+    # STREAM's trace is footprint-invariant (a single sequential sweep,
+    # no reuse), so the real grid axis is the op mix — copy/scale/triad
+    # differ in arithmetic per word moved (AI) and instruction overhead
+    # (MPKI denominator), mirroring make_suite's STRCpy/STRTriad split.
+    for op, ai, ipa in (("copy", 0.55, 2.0), ("scale", 1.0, 2.3),
+                        ("triad", 1.3, 2.6)):
+        add(f"syn.stream.{op}", "stream", ai, ipa,
+            tracegen._stream(64 * _MiB_WORDS, refs),
+            op=op, footprint_mib=64)
+    for mib in (32, 64, 96):  # footprint grid (edge/hash tables)
+        add(f"syn.irregular.{mib}MiB", "irregular", 1.1, 2.5,
+            tracegen._irregular(mib * _MiB_WORDS, refs), footprint_mib=mib)
+    for mib, every, ipa in ((64, 8, 16.0), (32, 8, 18.0), (64, 10, 14.0)):
+        add(f"syn.chase.{mib}MiB.e{every}", "chase", 1.0, ipa,
+            tracegen._chase(mib * _MiB_WORDS, refs, cold_every=every),
+            footprint_mib=mib, cold_every=every)
+    for mib in (12, 24, 48):  # per-problem tile footprints
+        add(f"syn.blocked.{mib}MiB", "blocked", 1.1, 15.0,
+            tracegen._blocked(mib * _MiB_WORDS, 2 * refs),
+            footprint_mib=mib, trace_refs=2 * refs)
+    for lines, sweeps in ((8000, 5), (6000, 6), (7000, 5)):
+        add(f"syn.contended.{lines}l.s{sweeps}", "contended", 1.4, 11.0,
+            tracegen._contended(lines, run=3, sweeps=sweeps),
+            distinct_lines=lines, sweeps=sweeps)
+    for factor in (1.4, 1.7, 2.0):  # working set vs the 32 KB L1
+        ws = int(_L1_WORDS * factor)
+        add(f"syn.l1cap.{factor:.1f}xL1", "l1cap", 1.4, 9.0,
+            tracegen._l1cap(ws, refs, run=9, stream_every=6),
+            ws_over_l1=factor)
+    for factor, ai in ((1.8, 16.0), (2.2, 24.0), (2.8, 32.0)):
+        blk = int(_L1_WORDS * factor)
+        add(f"syn.gemm.{factor:.1f}xL1", "gemm", ai, 22.0,
+            tracegen._gemm(blk, refs, run=9), block_over_l1=factor)
+    return out
+
+
+_SYNTH_DOMAINS = {
+    "stream": "HPC/streaming",
+    "irregular": "graph/analytics",
+    "chase": "data-structure/pointer",
+    "blocked": "image/tiled-stencil",
+    "contended": "HPC/shared-LLC",
+    "l1cap": "linear-algebra/small-ws",
+    "gemm": "linear-algebra/blocked",
+}
+
+
+def default_registry(*, refs: int | None = None) -> SuiteRegistry:
+    """The standard roster: 21 synthetic grid points + 12 captured kernels.
+
+    ``refs`` is the synthetic trace length
+    (default :data:`repro.core.tracegen.DEFAULT_REFS`); captured traces
+    carry their own per-kernel lengths — they *are* the subject under test
+    and do not shrink with ``refs``.
+    """
+    refs = tracegen.DEFAULT_REFS if refs is None else refs
+    reg = SuiteRegistry()
+    for w, params in _synthetic_grid(refs):
+        reg.register(w, domain=_SYNTH_DOMAINS[w.family], source="synthetic",
+                     **params)
+    for spec, w in zip(CAPTURED_KERNELS, captured_workloads()):
+        reg.register(w, domain=spec.domain, source="captured",
+                     **spec.params())
+    return reg

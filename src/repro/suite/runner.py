@@ -1,0 +1,137 @@
+"""Suite runner: fan the roster over the memoized engine, persist results.
+
+:class:`SuiteRunner` characterizes every registered entry with the
+standard Step-2/Step-3 pipeline — locality on the 1-core trace, then the
+host core sweep fanned over
+:meth:`repro.study.engine.SimEngine.sweep_parallel` (via
+``classify.measure``) — and assigns the six-class verdict.  Each finished
+entry row is persisted to a content-addressed :class:`ResultStore`, so
+re-running a suite re-simulates only the missing cells; recalled rows are
+byte-identical to freshly computed ones (they store the rounded values).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core import cachesim, classify
+from repro.core.sweep import CORE_SWEEP
+from repro.study.engine import SimEngine
+from repro.study.result import StudyResult
+from repro.study.study import Study
+
+from .registry import SuiteEntry, SuiteRegistry
+from .store import ResultStore
+
+__all__ = ["SuiteRunner", "ROSTER_COLUMNS", "CLASSES"]
+
+ROSTER_COLUMNS = (
+    "name", "domain", "source", "expected", "assigned", "match",
+    "spatial", "temporal", "ai", "mpki", "lfmr_mean", "lfmr_slope",
+)
+CLASSES = classify.CLASSES
+
+
+@dataclass
+class RunStats:
+    computed: int = 0
+    recalled: int = 0
+
+    def as_dict(self) -> dict[str, int]:
+        return {"computed": self.computed, "recalled": self.recalled}
+
+
+class SuiteRunner:
+    """One registry x one memoized engine x one (optional) result store."""
+
+    def __init__(
+        self,
+        registry: SuiteRegistry,
+        *,
+        seed: int = 0,
+        cores: tuple[int, ...] = CORE_SWEEP,
+        backend: str | None = None,
+        store: ResultStore | None = None,
+    ) -> None:
+        self.registry = registry
+        self.seed = seed
+        self.cores = tuple(cores)
+        self.store = store
+        # Resolve the backend now so the store fingerprint names the
+        # implementation that actually runs (REPRO_SIM_BACKEND included).
+        self.backend = backend if backend is not None else \
+            cachesim.default_backend()
+        self.study = Study(
+            suite=registry.workloads(), seed=seed, cores=self.cores,
+            engine=SimEngine(backend=self.backend),
+        )
+        self.stats = RunStats()
+        self._rows: dict[str, tuple] = {}
+
+    # ---- characterization ------------------------------------------------
+    def _characterize(self, entry: SuiteEntry) -> tuple:
+        w = entry.workload
+        spatial, temporal = self.study.locality(w)
+        m = self.study.metrics(w)
+        assigned = classify.classify(m)
+        return (
+            entry.name, entry.domain, entry.source, entry.expected_class,
+            assigned, int(assigned == entry.expected_class),
+            round(spatial, 3), round(temporal, 3), round(m.ai, 3),
+            round(m.mpki, 2), round(m.lfmr_mean, 3), round(m.lfmr_slope, 3),
+        )
+
+    def row(self, entry: SuiteEntry) -> tuple:
+        """One roster row, store-first (computed and persisted on miss)."""
+        got = self._rows.get(entry.name)
+        if got is not None:
+            return got
+        key = entry.fingerprint(seed=self.seed, cores=self.cores,
+                                backend=self.backend)
+        if self.store is not None:
+            rec = self.store.get(key)
+            if rec is not None and rec.get("columns") == list(ROSTER_COLUMNS):
+                row = tuple(rec["row"])
+                self._rows[entry.name] = row
+                self.stats.recalled += 1
+                return row
+        row = self._characterize(entry)
+        if self.store is not None:
+            self.store.put(key, {"columns": list(ROSTER_COLUMNS),
+                                 "row": list(row)})
+        self._rows[entry.name] = row
+        self.stats.computed += 1
+        return row
+
+    # ---- tables ----------------------------------------------------------
+    def roster(self) -> StudyResult:
+        """The Table-3-style roster: one row per entry, both sources."""
+        res = StudyResult("suite_roster", ROSTER_COLUMNS)
+        for entry in self.registry:
+            res.append(self.row(entry))
+        return res
+
+    def histogram(self) -> StudyResult:
+        """Per-class entry counts, split by source (Fig. 2-style census)."""
+        roster = self.roster()
+        counts: dict[str, dict[str, int]] = {
+            c: {"synthetic": 0, "captured": 0} for c in CLASSES
+        }
+        for rec in roster.records():
+            counts.setdefault(rec["assigned"],
+                              {"synthetic": 0, "captured": 0})
+            counts[rec["assigned"]][rec["source"]] += 1
+        res = StudyResult("class_histogram",
+                          ("class", "synthetic", "captured", "total"))
+        for cls in sorted(counts):
+            s, c = counts[cls]["synthetic"], counts[cls]["captured"]
+            if cls in CLASSES or s or c:
+                res.append((cls, s, c, s + c))
+        return res
+
+    def divergent(self, *, source: str = "captured") -> list[dict]:
+        """Entries of ``source`` whose assigned class != expected class."""
+        return [
+            rec for rec in self.roster().records()
+            if rec["source"] == source and not rec["match"]
+        ]

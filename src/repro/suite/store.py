@@ -1,0 +1,75 @@
+"""Content-addressed on-disk store for suite characterization records.
+
+Each record is one entry's finished roster row, keyed by the entry's
+:meth:`~repro.suite.registry.SuiteEntry.fingerprint` — a hash of
+everything that determines the result (workload identity + parameters,
+seed, core sweep, schema version).  Re-running a suite therefore
+re-simulates only the cells whose fingerprints are missing; everything
+else is recalled byte-identically (records store the already-rounded row
+values, and JSON round-trips them losslessly).
+
+Layout: ``<root>/<key[:2]>/<key>.json``; writes are atomic
+(tmp + ``os.replace``) so concurrent runners can share a store.  The root
+defaults to ``$REPRO_SUITE_STORE`` or ``~/.cache/repro-suite``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from pathlib import Path
+
+__all__ = ["ResultStore", "default_store_root"]
+
+
+def default_store_root() -> Path:
+    env = os.environ.get("REPRO_SUITE_STORE")
+    if env:
+        return Path(env)
+    return Path(os.path.expanduser("~")) / ".cache" / "repro-suite"
+
+
+class ResultStore:
+    """Minimal content-addressed JSON record store."""
+
+    def __init__(self, root: str | Path | None = None) -> None:
+        self.root = Path(root) if root is not None else default_store_root()
+
+    def _path(self, key: str) -> Path:
+        if not key or any(c not in "0123456789abcdef" for c in key):
+            raise ValueError(f"store key must be a hex digest, got {key!r}")
+        return self.root / key[:2] / f"{key}.json"
+
+    def get(self, key: str) -> dict | None:
+        path = self._path(key)
+        try:
+            with open(path) as f:
+                return json.load(f)
+        except FileNotFoundError:
+            return None
+        except json.JSONDecodeError:
+            return None  # truncated/corrupt record: treat as missing
+
+    def put(self, key: str, record: dict) -> None:
+        path = self._path(key)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(record, f, sort_keys=True)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def __len__(self) -> int:
+        if not self.root.exists():
+            return 0
+        return sum(1 for _ in self.root.glob("*/*.json"))
+
+    def __contains__(self, key: str) -> bool:
+        return self._path(key).exists()

@@ -38,8 +38,17 @@ def _one_per_family():
 _FAMILY_WORKLOADS = _one_per_family()
 
 
+# The contended family's repeat-heavy traces are the matrix's heaviest
+# cells (each runs the reference per-line loop too): slow-marked out of
+# the fast local loop; CI (`-m "not timing"`) still runs them.
+_FAMILY_PARAMS = [
+    pytest.param(f, marks=pytest.mark.slow) if f == "contended" else f
+    for f in sorted(tracegen.FAMILIES)
+]
+
+
 class TestDifferentialMatrix:
-    @pytest.mark.parametrize("family", sorted(tracegen.FAMILIES))
+    @pytest.mark.parametrize("family", _FAMILY_PARAMS)
     @pytest.mark.parametrize("config_name", sorted(CONFIGS))
     @pytest.mark.parametrize("l3_factor", L3_FACTORS)
     def test_counters_identical(self, family, config_name, l3_factor):
@@ -170,6 +179,7 @@ class TestFirstLevelCache:
 
 
 @pytest.mark.slow
+@pytest.mark.timing  # wall-clock ratio: flaky on shared CI runners
 def test_vectorized_speedup_60k_host_cell():
     """Acceptance: a 60k-ref host-config cell runs >= 10x faster on the
     vectorized backend than on the reference loop."""

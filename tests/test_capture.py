@@ -1,0 +1,246 @@
+"""Tests for the Pallas-kernel trace capture subsystem (repro.capture).
+
+Covers the grid walker's pipeline semantics (revisit-skip fetches,
+write-back-on-last-visit stores), footprint/coverage identity against the
+declared launch geometry, determinism, and — when jax is importable — the
+consistency of the mirrored geometry constants with the real kernels.
+"""
+
+import numpy as np
+import pytest
+
+from repro.capture import CAPTURED_KERNELS, captured_workloads, walk
+from repro.capture.grid import GridCapture, OperandSpec
+from repro.kernels.flash_attention import capture as flash_capture
+from repro.kernels.stream import capture as stream_capture
+from repro.kernels.token_gather import capture as gather_capture
+
+
+# --------------------------------------------------------------------------
+# Walker semantics
+# --------------------------------------------------------------------------
+class TestWalker:
+    def test_stream_copy_covers_both_arrays_exactly_once(self):
+        cap = stream_capture.capture("copy", 2**17)  # 2 tiles
+        res = walk(cap)
+        n_words = 2**17 // 2
+        assert res.loads == n_words and res.stores == n_words
+        assert res.refs == 2 * n_words
+        assert res.footprint_words == 2 * n_words
+        # every array word appears exactly once: distinct addresses == refs
+        assert np.unique(res.addresses).size == res.refs
+
+    def test_scalar_operand_fetched_once(self):
+        cap = stream_capture.capture("scale", 2**18)
+        res = walk(cap)
+        # q is 1 word; array loads + q + stores
+        n_words = 2**18 // 2
+        assert res.loads == n_words + 1
+        assert res.stores == n_words
+
+    def test_output_written_back_once_per_block(self):
+        cap = stream_capture.capture("add", 2**17)
+        res = walk(cap)
+        n_words = 2**17 // 2
+        assert res.stores == n_words  # one write-back per output word
+
+    def test_flash_q_fetched_once_per_q_tile(self):
+        cap = flash_capture.capture(sq=256, sk=512, d=64)
+        res = walk(cap)
+        n_q, n_kv = 2, 4
+        q_words = 128 * 64 // 2
+        kv_words = 128 * 64 // 2
+        # q: once per qi (revisit-skip across the kv axis); k+v every step;
+        # o: one write-back per q tile.
+        assert res.loads == n_q * q_words + n_q * n_kv * 2 * kv_words
+        assert res.stores == n_q * q_words
+
+    def test_gather_rows_follow_indices(self):
+        rng = np.random.default_rng(7)
+        cap = gather_capture.capture(1024, 128, 16, rng=rng)
+        res = walk(cap)
+        row_words = 128 // 2
+        # idx (16 int32 -> 8 words) + 16 table rows + 16 out rows
+        assert res.loads == 8 + 16 * row_words
+        assert res.stores == 16 * row_words
+        # the table-row loads land at the captured indices' offsets
+        idx_op = cap.operands[1]
+        idx = [idx_op.index_map(i)[0] for i in range(16)]
+        assert all(0 <= i < 1024 for i in idx)
+
+    def test_count_only_walk_matches_full_walk(self):
+        rng = np.random.default_rng(5)
+        for cap in (stream_capture.capture("triad", 2**18),
+                    flash_capture.capture(sq=256, sk=512, d=64),
+                    gather_capture.capture(1024, 128, 16, rng=rng)):
+            full = walk(cap)
+            fast = walk(cap, count_only=True)
+            assert (fast.loads, fast.stores) == (full.loads, full.stores)
+            assert fast.refs == full.refs == full.addresses.size
+            assert fast.flops_per_ref == full.flops_per_ref
+            assert fast.addresses.size == 0
+
+    def test_unaligned_row_stride_rejected(self):
+        with pytest.raises(ValueError, match="last dim"):
+            OperandSpec("x", "in", (4, 5), (2, 5), lambda i: (0, 0))
+
+    def test_walk_deterministic(self):
+        cap = flash_capture.capture(sq=256, sk=512, d=64)
+        a, b = walk(cap), walk(cap)
+        assert np.array_equal(a.addresses, b.addresses)
+        assert (a.loads, a.stores, a.flops) == (b.loads, b.stores, b.flops)
+
+    def test_operand_validation(self):
+        with pytest.raises(ValueError, match="role"):
+            OperandSpec("x", "inout", (8,), (8,), lambda i: (0,))
+        with pytest.raises(ValueError, match="rank"):
+            OperandSpec("x", "in", (8, 8), (8,), lambda i: (0,))
+
+    def test_empty_grid(self):
+        res = walk(GridCapture("empty", (0,), operands=(
+            OperandSpec("a", "in", (8, 128), (8, 128), lambda i: (0, 0)),)))
+        assert res.refs == 0 and res.grid_steps == 0
+
+
+# --------------------------------------------------------------------------
+# Captured workloads (the suite's `captured` source)
+# --------------------------------------------------------------------------
+class TestCapturedWorkloads:
+    def test_roster_shape(self):
+        ws = captured_workloads()
+        assert len(ws) == len(CAPTURED_KERNELS) == 12
+        assert len({w.name for w in ws}) == 12
+        kernels = {s.kernel for s in CAPTURED_KERNELS}
+        assert kernels == {"stream", "gather", "flashattn"}
+        for spec in CAPTURED_KERNELS:
+            assert spec.expected_class in ("1a", "1b", "1c")
+
+    def test_traces_deterministic_across_builds(self):
+        for ws in (captured_workloads(), captured_workloads()):
+            w = next(x for x in ws if x.name == "pal.gather.64kx128")
+            a = w.trace(4, seed=0).addresses
+        b = next(x for x in captured_workloads()
+                 if x.name == "pal.gather.64kx128").trace(4, seed=0).addresses
+        assert np.array_equal(a, b)
+
+    def test_gather_trace_seed_sensitivity(self):
+        w = next(x for x in captured_workloads()
+                 if x.name == "pal.gather.64kx128")
+        assert not np.array_equal(w.trace(1, seed=0).addresses,
+                                  w.trace(1, seed=1).addresses)
+
+    def test_target_refs_normalization(self):
+        w = next(x for x in captured_workloads()
+                 if x.name == "pal.flashattn.d128.kv2k")
+        for cores in (1, 16, 256):
+            assert w.trace(cores).addresses.size == 300_000
+
+    def test_kv_split_shrinks_per_core_footprint(self):
+        w = next(x for x in captured_workloads()
+                 if x.name == "pal.flashattn.d64.kv20k")
+        lines1 = np.unique(w.trace(1).addresses // 8).size
+        lines64 = np.unique(w.trace(64).addresses // 8).size
+        assert lines64 < lines1 / 8  # flash-decoding chunking
+        assert w.trace(64).l3_factor == pytest.approx(1 / 64)
+
+    def test_stream_capture_classifies_1a(self):
+        """One cheap end-to-end check: the captured copy kernel recovers
+        the paper's STREAM verdict (full captured-class coverage runs in
+        the suite CLI / CI smoke leg)."""
+        from repro.core import classify
+
+        w = next(x for x in captured_workloads()
+                 if x.name == "pal.stream.copy.1MiB")
+        m = classify.measure(w)
+        assert classify.classify(m) == "1a"
+        assert m.temporal < 0.1 and m.mpki > 11
+
+
+def test_capture_and_suite_importable_without_jax():
+    """Acceptance: capture requires neither a TPU nor jax — a blocked-jax
+    interpreter can still build the registry and classify a captured
+    kernel."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = os.path.abspath(src)
+    code = (
+        "import sys; sys.modules['jax'] = None\n"
+        "from repro.suite import default_registry\n"
+        "from repro.core import classify\n"
+        "reg = default_registry(refs=2000)\n"
+        "w = reg.by_source('captured')[0].workload\n"
+        "m = classify.measure(w, cores=(1,))\n"
+        "print(len(reg), classify.classify(m))\n"
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True,
+        text=True, check=True,
+    )
+    assert out.stdout.split() == ["33", "1a"]
+
+
+# --------------------------------------------------------------------------
+# Mirrored-geometry consistency against the real kernels (needs jax)
+# --------------------------------------------------------------------------
+class TestKernelConsistency:
+    def test_stream_constants_match_kernel(self):
+        kernel = pytest.importorskip("repro.kernels.stream.kernel")
+        assert stream_capture.LANES == kernel.LANES
+        assert stream_capture.DEFAULT_BLOCK_ROWS == kernel.DEFAULT_BLOCK_ROWS
+
+    def test_gather_capture_matches_interpret_kernel(self):
+        """The captured index->row mapping is the one the Pallas kernel
+        implements (interpret mode, no TPU)."""
+        pytest.importorskip("jax")
+        import jax.numpy as jnp
+
+        from repro.kernels.token_gather.kernel import gather_rows
+
+        rng = np.random.default_rng(3)
+        cap = gather_capture.capture(64, 128, 8, rng=rng)
+        idx_map = cap.operands[1].index_map
+        idx = np.array([idx_map(i)[0] for i in range(8)])
+
+        table = jnp.arange(64 * 128, dtype=jnp.float32).reshape(64, 128)
+        out = gather_rows(table, jnp.asarray(idx, dtype=jnp.int32),
+                          interpret=True)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(table)[idx])
+
+    def test_flash_capture_mirrors_real_pallas_call(self, monkeypatch):
+        """Intercept the kernel's actual ``pl.pallas_call`` and assert the
+        capture hook mirrors its grid, block shapes, and index maps — a
+        grid-order or index-map change in kernel.py fails here."""
+        pytest.importorskip("jax")
+        import jax.numpy as jnp
+
+        from repro.kernels.flash_attention import kernel as fk
+
+        seen = {}
+        real = fk.pl.pallas_call
+
+        def spy(body, *, grid=None, in_specs=None, out_specs=None, **kw):
+            seen.update(grid=grid, in_specs=in_specs, out_specs=out_specs)
+            return real(body, grid=grid, in_specs=in_specs,
+                        out_specs=out_specs, **kw)
+
+        monkeypatch.setattr(fk.pl, "pallas_call", spy)
+        # unique shapes: forces a fresh jit trace so the spy fires
+        sq, sk, d = 384, 640, 64
+        q = jnp.ones((1, sq, 1, d), jnp.float32)
+        k = v = jnp.ones((1, sk, 1, d), jnp.float32)
+        fk.flash_attention(q, k, v, causal=False, interpret=True)
+        assert "grid" in seen, "pallas_call not traced"
+
+        cap = flash_capture.capture(sq=sq, sk=sk, d=d)
+        assert tuple(seen["grid"]) == cap.grid == (1, 3, 5)
+        kernel_specs = list(seen["in_specs"]) + [seen["out_specs"]]
+        for spec, op in zip(kernel_specs, cap.operands):
+            assert tuple(spec.block_shape) == op.block_shape, op.name
+            for step in np.ndindex(*cap.grid):
+                assert tuple(spec.index_map(*step)) == \
+                    tuple(op.index_map(*step)), (op.name, step)

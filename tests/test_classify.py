@@ -1,23 +1,41 @@
-"""Tests for the six-class bottleneck classifier + §3.5 validation flow."""
+"""Tests for the six-class bottleneck classifier + §3.5 validation flow.
+
+Everything here measures calibration-length traces (30k+ refs across the
+full core sweep), so the module carries the ``slow`` marker; the fast
+local loop (``pytest -m "not slow"``) covers classification plumbing via
+test_study/test_suite instead, and CI (``-m "not timing"``) runs this.
+"""
+
+import functools
 
 import numpy as np
 import pytest
 
 from repro.core import classify, scalability, tracegen
 
-# One full suite measurement is expensive-ish; share it.
-_SUITE = tracegen.make_suite(refs=30_000)
-_METRICS = [classify.measure(w) for w in _SUITE]
+pytestmark = pytest.mark.slow  # calibration-length trace measurements
+
+
+# One full suite measurement is expensive-ish; share it (lazily, so
+# collecting this module under `-m "not slow"` costs nothing).
+@functools.lru_cache(maxsize=1)
+def _suite():
+    return tracegen.make_suite(refs=30_000)
+
+
+@functools.lru_cache(maxsize=1)
+def _metrics():
+    return [classify.measure(w) for w in _suite()]
 
 
 class TestClassifier:
     def test_training_suite_fully_recovered(self):
         """All 14 base workloads classify into their DAMOV class."""
-        for m in _METRICS:
+        for m in _metrics():
             assert classify.classify(m) == m.expected_class, m.name
 
     def test_metric_profiles_match_paper(self):
-        by = {m.name: m for m in _METRICS}
+        by = {m.name: m for m in _metrics()}
         # Class 1a: high MPKI, LFMR ~ 1, low temporal
         assert by["STRCpy"].mpki > 11
         assert by["STRCpy"].lfmr_mean > 0.9
@@ -35,7 +53,7 @@ class TestClassifier:
         assert by["HPGSpm"].mpki < 3.0
 
     def test_derive_thresholds_sane(self):
-        t = classify.derive_thresholds(_METRICS)
+        t = classify.derive_thresholds(_metrics())
         # derived thresholds should separate in the same bands as the
         # paper's published ones (temporal 0.48, MPKI 11, AI 8.5)
         assert 0.1 < t.temporal < 0.7
@@ -46,7 +64,7 @@ class TestClassifier:
         """Paper §3.5: 97% accuracy on 100 held-out functions.  We require
         >= 90% on 4 jittered variants per family (56 held-out items)."""
         held = tracegen.make_suite(refs=30_000, variants=5, seed=123)[14:]
-        thresholds = classify.derive_thresholds(_METRICS)
+        thresholds = classify.derive_thresholds(_metrics())
         metrics = [classify.measure(w) for w in held]
         acc, rows = classify.validate(metrics, thresholds)
         assert acc >= 0.90, rows
@@ -55,7 +73,7 @@ class TestClassifier:
 class TestScalability:
     # Full-length traces here: cold-miss effects at 30k refs flatten the
     # 2b/2c classes (calibration is at tracegen.DEFAULT_REFS, the suite
-    # default).
+    # default).  Workload construction is lazy-cheap; traces are not.
     _FULL = {w.name: w for w in tracegen.make_suite()}
 
     def test_class_speedup_ordering(self):
@@ -78,19 +96,19 @@ class TestScalability:
             pytest.approx(3.75, abs=0.1)
 
     def test_host_saturates_bandwidth_class_1a(self):
-        w = next(w for w in _SUITE if w.name == "STRCpy")
+        w = next(w for w in _suite() if w.name == "STRCpy")
         r = scalability.analyze(w)
         perf = r.perf_normalized("host")
         # saturation: 64 -> 256 cores gains < 15% (paper Fig 6)
         assert perf[4] < perf[3] * 1.15
 
     def test_ndp_always_helps_1b(self):
-        w = next(w for w in _SUITE if w.name == "PLYalu")
+        w = next(w for w in _suite() if w.name == "PLYalu")
         r = scalability.analyze(w)
         assert all(s > 1.0 for s in r.speedup_ndp_vs_host())
 
     def test_host_overtakes_ndp_for_1c_at_scale(self):
-        w = next(w for w in _SUITE if w.name == "DRKRes")
+        w = next(w for w in _suite() if w.name == "DRKRes")
         r = scalability.analyze(w)
         sp = r.speedup_ndp_vs_host()
         assert sp[0] > 1.0 and sp[-1] < 1.0
@@ -98,7 +116,7 @@ class TestScalability:
     def test_inorder_vs_ooo_direction(self):
         """Paper §3.5.2: NDP speedup with in-order cores >= ooo (less
         latency tolerance on the host side)."""
-        w = next(w for w in _SUITE if w.name == "CHAHsti")
+        w = next(w for w in _suite() if w.name == "CHAHsti")
         sp_o = np.mean(scalability.analyze(w, core_model="ooo")
                        .speedup_ndp_vs_host())
         sp_i = np.mean(scalability.analyze(w, core_model="inorder")
@@ -106,7 +124,7 @@ class TestScalability:
         assert sp_i >= sp_o * 0.95
 
     def test_energy_direction(self):
-        by = {w.name: w for w in _SUITE}
+        by = {w.name: w for w in _suite()}
         r1a = scalability.analyze(by["STRCpy"])
         e_ndp = r1a.points["ndp"][3].energy.total_j
         e_host = r1a.points["host"][3].energy.total_j

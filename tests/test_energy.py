@@ -1,0 +1,102 @@
+"""Direct unit tests for the Table-1 energy model (repro.core.energy).
+
+Built on hand-constructed SimResults (no simulation), covering the
+NDP/host term split, ``scaled()`` linearity, ``total_j`` consistency, and
+the NUCA NoC term.
+"""
+
+import pytest
+
+from repro.core import energy
+from repro.core.cachesim import LINE_BYTES, SimResult
+
+
+def _host_sim(l1h=100, l1m=50, l2h=30, l2m=20, l3h=12, l3m=8, pf=0):
+    return SimResult(
+        name="host", accesses=l1h + l1m, instructions=1000, ai=1.0,
+        level_misses=(l1m, l2m, l3m), level_hits=(l1h, l2h, l3h),
+        lines_touched=64, prefetch_issued=pf,
+    )
+
+
+def _ndp_sim(l1h=100, l1m=50):
+    return SimResult(
+        name="ndp", accesses=l1h + l1m, instructions=1000, ai=1.0,
+        level_misses=(l1m,), level_hits=(l1h,), lines_touched=64,
+    )
+
+
+class TestTermSplit:
+    def test_ndp_skips_l2_l3_and_link_terms(self):
+        e = energy.energy_for(_ndp_sim(), ndp=True)
+        assert e.l2_j == 0.0 and e.l3_j == 0.0
+        assert e.link_j == 0.0  # NDP cores sit in the logic layer
+        assert e.l1_j > 0.0 and e.dram_j > 0.0
+
+    def test_host_pays_the_serdes_link(self):
+        e = energy.energy_for(_host_sim(), ndp=False)
+        assert e.link_j > 0.0
+        bits = 8 * LINE_BYTES * 8  # 8 LLC misses
+        assert e.link_j == pytest.approx(bits * energy.LINK_PJ_BIT * 1e-12)
+
+    def test_dram_term_internal_plus_logic_for_both(self):
+        host = energy.energy_for(_host_sim(), ndp=False)
+        bits = 8 * LINE_BYTES * 8
+        expect = bits * (energy.DRAM_INTERNAL_PJ_BIT +
+                         energy.DRAM_LOGIC_PJ_BIT) * 1e-12
+        assert host.dram_j == pytest.approx(expect)
+        ndp = energy.energy_for(_ndp_sim(l1m=8), ndp=True)
+        assert ndp.dram_j == pytest.approx(expect)
+
+    def test_cache_terms_follow_table1_rates(self):
+        e = energy.energy_for(_host_sim(l1h=10, l1m=2, l2h=3, l2m=1,
+                                        l3h=4, l3m=0))
+        assert e.l1_j == pytest.approx(
+            (10 * energy.L1_HIT + 2 * energy.L1_MISS) * 1e-12)
+        assert e.l2_j == pytest.approx(
+            (3 * energy.L2_HIT + 1 * energy.L2_MISS) * 1e-12)
+        assert e.l3_j == pytest.approx(4 * energy.L3_HIT * 1e-12)
+
+    def test_prefetch_traffic_charged_to_dram(self):
+        base = energy.energy_for(_host_sim(pf=0))
+        with_pf = energy.energy_for(_host_sim(pf=16))
+        assert with_pf.dram_j > base.dram_j
+        assert with_pf.link_j > base.link_j
+
+    def test_nuca_hops_add_noc_term(self):
+        off = energy.energy_for(_host_sim(), nuca_hops=0.0)
+        on = energy.energy_for(_host_sim(), nuca_hops=2.5)
+        assert off.noc_j == 0.0
+        l3_accesses = 12 + 8
+        assert on.noc_j == pytest.approx(
+            l3_accesses * 2.5 *
+            (energy.NOC_ROUTER_PJ + energy.NOC_LINK_PJ) * 1e-12)
+        assert on.total_j == pytest.approx(off.total_j + on.noc_j)
+
+
+class TestBreakdownAlgebra:
+    def test_total_is_sum_of_components(self):
+        for e in (energy.energy_for(_host_sim(), nuca_hops=1.0),
+                  energy.energy_for(_ndp_sim(), ndp=True)):
+            assert e.total_j == pytest.approx(
+                e.l1_j + e.l2_j + e.l3_j + e.dram_j + e.link_j + e.noc_j)
+
+    @pytest.mark.parametrize("k", [0.0, 1.0, 3.5, 256.0])
+    def test_scaled_is_linear(self, k):
+        e = energy.energy_for(_host_sim(), nuca_hops=1.0)
+        s = e.scaled(k)
+        for field in ("l1_j", "l2_j", "l3_j", "dram_j", "link_j", "noc_j"):
+            assert getattr(s, field) == pytest.approx(
+                k * getattr(e, field))
+        assert s.total_j == pytest.approx(k * e.total_j)
+
+    def test_scaled_composes(self):
+        e = energy.energy_for(_host_sim())
+        assert e.scaled(2.0).scaled(3.0).total_j == pytest.approx(
+            e.scaled(6.0).total_j)
+
+    def test_scaled_returns_new_object(self):
+        e = energy.energy_for(_host_sim())
+        s = e.scaled(2.0)
+        assert s is not e
+        assert e.total_j > 0.0  # original untouched

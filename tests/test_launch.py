@@ -150,9 +150,11 @@ class TestHloAnalysis:
         assert rt.bottleneck_class == "latency"
 
 
+@pytest.mark.slow
 class TestMiniDryrun:
     """End-to-end lower+compile on the in-process (1-device) mesh, smoke
-    configs — validates the same build_cell path the 512-way dry-run uses."""
+    configs — validates the same build_cell path the 512-way dry-run uses.
+    (~20 s of XLA compilation: slow-marked out of the fast local loop.)"""
 
     @pytest.mark.parametrize("arch", ["qwen2.5-14b", "deepseek-moe-16b",
                                       "mamba2-780m"])

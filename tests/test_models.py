@@ -4,6 +4,10 @@ Every assigned architecture instantiates its REDUCED config and runs one
 forward + one train step on CPU, asserting output shapes and finiteness.
 Decode consistency (prefill + step-by-step decode == full forward) is
 checked for one representative of each family.
+
+Every test here jit-compiles at least one full model, so the whole module
+carries the ``slow`` marker: ``pytest -m "not slow"`` is the fast local
+loop, CI runs ``-m "not timing"`` and keeps this coverage.
 """
 
 import jax
@@ -15,6 +19,8 @@ from repro import configs
 from repro.models import LM
 from repro.models import ssm as S
 from repro.train import AdamWConfig, build_train_step, init_train_state
+
+pytestmark = pytest.mark.slow  # full-model jit smokes
 
 KEY = jax.random.PRNGKey(0)
 

@@ -137,8 +137,10 @@ class TestCheckpoint:
         assert kept == ["step_00000003", "step_00000004"]
         assert mgr.latest_step() == 4
 
+    @pytest.mark.slow
     def test_restore_resumes_training(self, tmp_path):
-        """Kill-and-restart: resumed run continues from the saved step."""
+        """Kill-and-restart: resumed run continues from the saved step.
+        (Two jit-compiled mini training runs, ~15 s: slow-marked.)"""
         from repro.launch.train import train_loop
         cfg = configs.get_smoke("qwen2.5-14b")
         d = str(tmp_path / "ck")
@@ -211,6 +213,7 @@ class TestSharding:
 # --------------------------------------------------------------------------
 # serving engine
 # --------------------------------------------------------------------------
+@pytest.mark.slow  # full-model Engine runs (jit-compiled decode loops)
 class TestServing:
     def test_engine_generates_and_recycles_slots(self):
         cfg = configs.get_smoke("qwen2.5-14b")

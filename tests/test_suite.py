@@ -1,0 +1,228 @@
+"""Tests for the benchmark-suite subsystem (repro.suite).
+
+Registry invariants (roster size, both sources, name uniqueness,
+fingerprint content-addressing), the result store (round-trip, atomic
+layout, corrupt-record tolerance), the runner (store-first recall with
+zero re-simulation, byte-identical rosters), the suite substrate, and the
+CLI.  Heavy full-roster paths are exercised on reduced registries; the CI
+suite-smoke leg covers the full --fast roster.
+"""
+
+import numpy as np
+import pytest
+
+from repro.capture import captured_workloads
+from repro.core import tracegen
+from repro.study.substrate import SuiteSubstrate, get_substrate
+from repro.suite import (
+    ROSTER_COLUMNS,
+    ResultStore,
+    SuiteRegistry,
+    SuiteRunner,
+    default_registry,
+)
+
+REFS = 2_000
+CORES = (1, 4)
+
+
+def _tiny_registry(*, with_captured: bool = False,
+                   refs: int = REFS) -> SuiteRegistry:
+    reg = SuiteRegistry()
+    for w in tracegen.make_suite(refs=refs)[:3]:
+        reg.register(w, domain="synthetic-test", source="synthetic",
+                     refs=refs)
+    if with_captured:
+        w = next(x for x in captured_workloads()
+                 if x.name == "pal.stream.copy.1MiB")
+        reg.register(w, domain="TPU-kernel/streaming", source="captured")
+    return reg
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+class TestRegistry:
+    def test_default_roster_size_and_sources(self):
+        reg = default_registry(refs=REFS)
+        assert len(reg) >= 30
+        synth = reg.by_source("synthetic")
+        captured = reg.by_source("captured")
+        assert len(synth) >= 18 and len(captured) >= 10
+        assert len(synth) + len(captured) == len(reg)
+        names = [e.name for e in reg]
+        assert len(set(names)) == len(names)
+        # every synthetic family and every kernel family is represented
+        assert {e.workload.family for e in synth} == set(tracegen.FAMILIES)
+        assert {e.workload.family for e in captured} == {
+            "pallas-stream", "pallas-gather", "pallas-flashattn"}
+
+    def test_duplicate_name_rejected(self):
+        reg = _tiny_registry()
+        w = reg.entries[0].workload
+        with pytest.raises(ValueError, match="already registered"):
+            reg.register(w, domain="x", source="synthetic")
+
+    def test_bad_source_rejected(self):
+        reg = SuiteRegistry()
+        w = tracegen.make_suite(refs=REFS)[0]
+        with pytest.raises(ValueError, match="synthetic|captured"):
+            reg.register(w, domain="x", source="pallas")
+
+    def test_fingerprint_is_content_addressed(self):
+        reg = _tiny_registry()
+        e = reg.entries[0]
+        base = e.fingerprint(seed=0, cores=CORES)
+        assert base == e.fingerprint(seed=0, cores=CORES)
+        assert base != e.fingerprint(seed=1, cores=CORES)
+        assert base != e.fingerprint(seed=0, cores=(1, 4, 16))
+        assert base != reg.entries[1].fingerprint(seed=0, cores=CORES)
+        # an explicit backend cross-check must not recall the other
+        # backend's stored rows
+        assert base != e.fingerprint(seed=0, cores=CORES,
+                                     backend="reference")
+        # different synthetic trace length -> different params -> new key
+        other = _tiny_registry(refs=2 * REFS).entries[0]
+        assert base != other.fingerprint(seed=0, cores=CORES)
+
+
+# --------------------------------------------------------------------------
+# Result store
+# --------------------------------------------------------------------------
+class TestResultStore:
+    KEY = "ab" + "0" * 62
+
+    def test_round_trip(self, tmp_path):
+        store = ResultStore(tmp_path)
+        assert store.get(self.KEY) is None
+        rec = {"columns": ["a"], "row": [1.5]}
+        store.put(self.KEY, rec)
+        assert store.get(self.KEY) == rec
+        assert self.KEY in store
+        assert len(store) == 1
+        assert (tmp_path / "ab" / f"{self.KEY}.json").exists()
+
+    def test_corrupt_record_treated_as_missing(self, tmp_path):
+        store = ResultStore(tmp_path)
+        store.put(self.KEY, {"x": 1})
+        (tmp_path / "ab" / f"{self.KEY}.json").write_text("{trunc")
+        assert store.get(self.KEY) is None
+
+    def test_non_hex_key_rejected(self, tmp_path):
+        store = ResultStore(tmp_path)
+        with pytest.raises(ValueError, match="hex"):
+            store.get("../../etc/passwd")
+
+    def test_env_var_default_root(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_SUITE_STORE", str(tmp_path / "s"))
+        assert ResultStore().root == tmp_path / "s"
+
+
+# --------------------------------------------------------------------------
+# Runner
+# --------------------------------------------------------------------------
+class TestRunner:
+    def test_roster_rows_and_histogram(self):
+        runner = SuiteRunner(_tiny_registry(), cores=CORES)
+        roster = runner.roster()
+        assert roster.columns == ROSTER_COLUMNS
+        assert len(roster) == 3
+        hist = runner.histogram()
+        assert sum(hist.column("total")) == 3
+        assert sum(hist.column("synthetic")) == 3
+
+    def test_store_recall_skips_simulation(self, tmp_path):
+        reg = _tiny_registry()
+        store = ResultStore(tmp_path)
+        first = SuiteRunner(reg, cores=CORES, store=store)
+        r1 = first.roster()
+        assert first.stats.computed == 3 and first.stats.recalled == 0
+        assert first.study.engine.stats.sim_runs > 0
+
+        second = SuiteRunner(_tiny_registry(), cores=CORES, store=store)
+        r2 = second.roster()
+        assert second.stats.recalled == 3 and second.stats.computed == 0
+        assert second.study.engine.stats.sim_runs == 0  # nothing re-simulated
+        assert r1.to_csv() == r2.to_csv()
+
+    def test_partial_store_simulates_only_missing(self, tmp_path):
+        store = ResultStore(tmp_path)
+        reg = _tiny_registry()
+        warm = SuiteRunner(
+            SuiteRegistry(entries=reg.entries[:2]), cores=CORES, store=store)
+        warm.roster()
+
+        full = SuiteRunner(_tiny_registry(), cores=CORES, store=store)
+        full.roster()
+        assert full.stats.recalled == 2 and full.stats.computed == 1
+
+    def test_rosters_identical_with_and_without_store(self, tmp_path):
+        with_store = SuiteRunner(_tiny_registry(), cores=CORES,
+                                 store=ResultStore(tmp_path))
+        without = SuiteRunner(_tiny_registry(), cores=CORES)
+        assert with_store.roster().to_csv() == without.roster().to_csv()
+
+    def test_divergence_detection(self):
+        # mislabel a synthetic stream workload as a captured 2c kernel
+        w = tracegen.make_suite(refs=REFS)[0]
+        impostor = tracegen.Workload(
+            name="pal.fake", family=w.family, expected_class="2c",
+            ai_ops_per_access=w.ai_ops_per_access,
+            instr_per_access=w.instr_per_access, gen=w.gen)
+        reg = SuiteRegistry()
+        reg.register(impostor, domain="x", source="captured")
+        runner = SuiteRunner(reg, cores=CORES)
+        bad = runner.divergent(source="captured")
+        assert [rec["name"] for rec in bad] == ["pal.fake"]
+
+    def test_captured_entry_flows_through_runner(self):
+        runner = SuiteRunner(_tiny_registry(with_captured=True), cores=CORES)
+        roster = runner.roster()
+        rec = roster.records()[-1]
+        assert rec["source"] == "captured"
+        assert rec["assigned"] == "1a" == rec["expected"]
+        assert rec["match"] == 1
+        assert runner.divergent(source="captured") == []
+
+
+# --------------------------------------------------------------------------
+# Substrate + CLI
+# --------------------------------------------------------------------------
+class TestSubstrateAndCLI:
+    def test_suite_substrate_rows_start_with_name_class(self):
+        sub = SuiteSubstrate(runner=SuiteRunner(_tiny_registry(),
+                                                cores=CORES))
+        assert isinstance(get_substrate("suite"), SuiteSubstrate)
+        res = sub.characterize()
+        assert res.columns[:2] == ("name", "class")
+        assert len(res) == len(sub.items()) == 3
+        classes = set(res.column("class"))
+        assert classes <= {"1a", "1b", "1c", "2a", "2b", "2c"}
+
+    def test_cli_list(self, capsys):
+        from repro.suite.__main__ import main
+
+        assert main(["--list"]) == 0
+        out = capsys.readouterr().out
+        assert "pal.flashattn.d64.kv20k" in out
+        assert "syn.gemm.1.8xL1" in out
+        assert "21 synthetic, 12 captured" in out
+
+    @pytest.mark.slow  # full captured traces through the simulator (~20 s)
+    def test_cli_fast_roster_deterministic_and_checked(self, tmp_path):
+        from repro.suite.__main__ import main
+
+        out1, out2 = tmp_path / "r1.csv", tmp_path / "r2.csv"
+        store = str(tmp_path / "store")
+        assert main(["--fast", "--check", "--store", store,
+                     "--out", str(out1)]) == 0
+        assert main(["--fast", "--check", "--store", store,
+                     "--out", str(out2)]) == 0
+        assert out1.read_bytes() == out2.read_bytes()
+        text = out1.read_text()
+        assert text.startswith("## suite_roster")
+        assert "## class_histogram" in text
+        # >= 30 entries spanning both sources
+        roster = text.split("## class_histogram")[0].splitlines()
+        assert sum(1 for l in roster if ",synthetic," in l) == 21
+        assert sum(1 for l in roster if ",captured," in l) == 12

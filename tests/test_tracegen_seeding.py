@@ -13,6 +13,8 @@ import subprocess
 import sys
 import zlib
 
+import pytest
+
 from repro.core import tracegen
 
 _CHILD = r"""
@@ -42,6 +44,7 @@ def _trace_digest_under_hash_seed(hash_seed: str) -> str:
     return out.stdout.strip()
 
 
+@pytest.mark.slow  # three fresh interpreter subprocesses (~6 s)
 def test_traces_equal_across_interpreter_hash_seeds():
     digests = {_trace_digest_under_hash_seed(s) for s in ("0", "1", "31337")}
     assert len(digests) == 1, f"trace digests diverge across hash seeds: {digests}"
