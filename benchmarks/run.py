@@ -6,7 +6,8 @@ Usage::
 
 All figure sections are queries over ONE shared :class:`repro.study.Study`:
 the memoized engine simulates each (workload, cores, config) cell exactly
-once and every section reuses it, so the full run is one simulation pass.
+once — submitting every sweep through the batched single-pass backend —
+and every section reuses it, so the full run is one simulation pass.
 
 Sections map 1:1 to paper artifacts:
 
@@ -19,14 +20,26 @@ Sections map 1:1 to paper artifacts:
 - table3 — the registered benchmark-suite roster (repro.suite): synthetic
            family expansions + captured Pallas-kernel traces in one
            classification table
+- suite  — the suite subsystem's per-class histogram over the same
+           runner/roster (the CI smoke for the repro.suite path; shares
+           table3's runner, engine and result store)
 - case1..case4 — §5 case studies
 - roofline — §Roofline TPU table (from results/dryrun artifacts)
 - kernels  — Pallas kernel microbench + v5e roofline bounds
+
+Every run also writes a machine-readable perf record (default
+``BENCH_PR4.json``): per-section wall-clock + row counts, the resolved
+backend and batch mode, and engine cell statistics.  The file is
+merge-updated — keys this driver does not own (e.g. a committed baseline
+comparison block) are preserved — so the perf trajectory is trackable
+across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -49,8 +62,38 @@ def emit(section: str, result) -> list[tuple]:
     return rows
 
 
+def write_bench_json(path: str, config_key: str, payload: dict,
+                     *, partial: bool) -> None:
+    """Merge-update the perf record.
+
+    Section timings are only comparable under one configuration, so runs
+    are bucketed under ``runs[config_key]`` (fast mode + refs + backend):
+    a ``partial`` (``--only``) run refreshes just its own entries inside
+    its own bucket, a full run replaces its bucket's sections wholesale
+    (so renamed/removed sections cannot linger), and runs under a
+    *different* configuration — e.g. the CI smoke executed locally — can
+    never clobber another bucket.  Keys this driver does not own (e.g. a
+    committed baseline-comparison block) are preserved.
+    """
+    existing: dict = {}
+    try:
+        with open(path) as f:
+            existing = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        pass
+    runs = existing.setdefault("runs", {})
+    bucket = runs.setdefault(config_key, {})
+    sections = bucket.get("sections", {}) if partial else {}
+    sections.update(payload.pop("sections"))
+    bucket.update(payload)
+    bucket["sections"] = sections
+    with open(path, "w") as f:
+        json.dump(existing, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
 def main() -> None:
-    from repro.core.cachesim import BACKENDS
+    from repro.core.cachesim import BACKENDS, default_backend
     from repro.core.tracegen import DEFAULT_REFS
 
     ap = argparse.ArgumentParser()
@@ -60,10 +103,31 @@ def main() -> None:
     ap.add_argument("--backend", choices=BACKENDS, default=None,
                     help="cache-simulation implementation; default: "
                          "$REPRO_SIM_BACKEND or 'vectorized'")
+    ap.add_argument("--bench-json", default="BENCH_PR4.json", metavar="PATH",
+                    help="perf-record output path ('' disables)")
     args = ap.parse_args()
 
     refs = 20_000 if args.fast else DEFAULT_REFS
     study = Study(refs=refs, backend=args.backend)
+
+    # table3 and suite share one runner (engine + content-addressed result
+    # store), so repeat benchmark runs recall the roster instead of
+    # re-simulating and the suite section is free once table3 ran.
+    runner_box: list = []
+
+    def suite_runner():
+        if not runner_box:
+            from repro.suite import SuiteRunner, default_registry
+            runner_box.append(SuiteRunner(
+                default_registry(refs=refs), store=ResultStore(),
+                backend=args.backend))
+        return runner_box[0]
+
+    def suite_histogram():
+        runner = suite_runner()
+        res = runner.histogram()
+        res.name = "suite"
+        return res
 
     sections = {
         "fig1": lambda: paper_figures.fig1_roofline_mpki(study),
@@ -73,10 +137,8 @@ def main() -> None:
         "fig5_nuca": lambda: paper_figures.fig5_scalability(study, nuca=True),
         "fig7": lambda: paper_figures.fig7_energy(study),
         "fig18": lambda: paper_figures.fig18_summary_and_validation(study),
-        # table3 shares the suite CLI's content-addressed result store, so
-        # repeat benchmark runs recall the roster instead of re-simulating
-        "table3": lambda: paper_figures.table3_suite_roster(
-            refs=refs, store=ResultStore(), backend=args.backend),
+        "table3": lambda: paper_figures.table3_suite_roster(suite_runner()),
+        "suite": suite_histogram,
         "case1": lambda: paper_figures.case1_noc(study),
         "case2": lambda: paper_figures.case2_accelerators(study),
         "case3": lambda: paper_figures.case3_core_models(study),
@@ -88,18 +150,46 @@ def main() -> None:
     if args.fast:
         sections.pop("fig18")  # the 70-workload held-out sweep is slow
 
+    timings: dict[str, dict] = {}
+    t_start = time.time()
     for name, fn in sections.items():
         if args.only and args.only != name:
             continue
         t0 = time.time()
         result = fn()
         rows = emit(name, result)
-        print(f"# {name}: {len(rows)} rows in {time.time() - t0:.1f}s")
+        dt = time.time() - t0
+        timings[name] = {"seconds": round(dt, 2), "rows": len(rows)}
+        print(f"# {name}: {len(rows)} rows in {dt:.1f}s")
 
     s = study.stats
     print(f"# engine: {study.engine.cells} cells, "
           f"{s.sim_runs} simulated, {s.sim_hits} cache hits "
           f"({s.sim_hit_rate:.0%} hit rate)")
+
+    if args.bench_json:
+        backend = args.backend or default_backend()
+        config_key = (f"{'fast' if args.fast else 'full'}"
+                      f"-refs{refs}-{backend}")
+        payload = {
+            "meta": {
+                "fast": args.fast,
+                "refs": refs,
+                "backend": backend,
+                "batch": "simulate_batch",  # single-pass engine batching
+                "cpus": os.cpu_count(),
+            },
+            "sections": timings,
+        }
+        if not args.only:
+            # total wall-clock and engine stats describe a *complete* run;
+            # an --only run merges just its own section timings so it
+            # cannot misattribute partial-run stats to the whole bucket
+            payload["total_seconds"] = round(time.time() - t_start, 2)
+            payload["engine"] = s.as_dict()
+        write_bench_json(args.bench_json, config_key, payload,
+                         partial=bool(args.only))
+        print(f"# perf record -> {args.bench_json} [{config_key}]")
 
 
 if __name__ == "__main__":

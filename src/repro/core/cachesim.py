@@ -39,6 +39,7 @@ __all__ = [
     "HierarchyConfig",
     "SimResult",
     "simulate",
+    "simulate_batch",
     "host_config",
     "ndp_config",
     "BACKENDS",
@@ -166,6 +167,84 @@ class SimResult:
     @property
     def dram_bytes(self) -> int:
         return (self.llc_misses + self.prefetch_issued) * LINE_BYTES
+
+
+def broadcast_l3_factor(l3_factor, n: int) -> list[float]:
+    """Normalize ``simulate_batch``'s ``l3_factor`` argument: a scalar is
+    shared by all ``n`` configs, a sequence must match them one to one.
+    Shared by both backends so they accept identical inputs."""
+    if isinstance(l3_factor, (int, float)):
+        return [float(l3_factor)] * n
+    factors = [float(f) for f in l3_factor]
+    if len(factors) != n:
+        raise ValueError(
+            f"l3_factor sequence length {len(factors)} != {n} configs")
+    return factors
+
+
+def broadcast_names(names, n: int) -> list:
+    """Normalize ``simulate_batch``'s ``names`` argument (None -> one
+    ``None`` per config; a sequence must match the configs one to one).
+    Shared by both backends so they accept identical inputs."""
+    if names is None:
+        return [None] * n
+    names = list(names)
+    if len(names) != n:
+        raise ValueError(f"names length {len(names)} != {n} configs")
+    return names
+
+
+def simulate_batch(
+    addresses: np.ndarray,
+    configs,
+    *,
+    ai_ops_per_access: float = 1.0,
+    instr_per_access: float = 2.0,
+    l3_factor=1.0,
+    names=None,
+    backend: str | None = None,
+) -> list[SimResult]:
+    """Run one trace through several hierarchy configs in one call.
+
+    ``configs`` is a sequence of :class:`HierarchyConfig`; ``l3_factor``
+    may be a scalar (shared) or a per-config sequence, and ``names`` an
+    optional per-config result-name override.  On the vectorized backend
+    this is a true single pass (:func:`repro.core.cachesim_vec.simulate_batch`):
+    shared level prefixes are replayed once and same-set-count geometries
+    share one capped stack-distance scan.  On the reference backend it is
+    the equivalent per-config loop, so the two stay counter-identical
+    cell for cell.
+    """
+    if backend is None:
+        backend = default_backend()
+    if backend == "vectorized":
+        from . import cachesim_vec  # deferred: cachesim_vec imports us
+
+        return cachesim_vec.simulate_batch(
+            addresses,
+            configs,
+            ai_ops_per_access=ai_ops_per_access,
+            instr_per_access=instr_per_access,
+            l3_factor=l3_factor,
+            names=names,
+        )
+    if backend != "reference":
+        raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
+    configs = list(configs)
+    factors = broadcast_l3_factor(l3_factor, len(configs))
+    names = broadcast_names(names, len(configs))
+    return [
+        simulate(
+            addresses,
+            cfg,
+            ai_ops_per_access=ai_ops_per_access,
+            instr_per_access=instr_per_access,
+            l3_factor=f,
+            name=nm,
+            backend="reference",
+        )
+        for cfg, f, nm in zip(configs, factors, names)
+    ]
 
 
 class _LRUCache:

@@ -4,7 +4,8 @@ Produces :class:`~repro.core.cachesim.SimResult`\\ s whose hit/miss counters
 are *exactly* equal to the reference per-line loop in
 :mod:`repro.core.cachesim` (the differential harness in
 ``tests/test_cachesim_vec.py`` sweeps every workload family x hierarchy x
-``l3_factor`` cell and asserts counter identity), at 10-40x the throughput.
+``l3_factor`` cell — single-cell and batched — and asserts counter
+identity), at 10-40x the throughput.
 
 How it works
 ------------
@@ -25,18 +26,42 @@ into counting, which vectorizes — no per-line state machine is needed:
    ``(prev, i)`` is the count of window-first accesses ``j`` — those whose
    own previous occurrence ``q[j]`` lies at or before ``prev``.  The scan
    runs in geometrically growing chunks across all live queries at once
-   and stops early the moment a query's count reaches ``ways`` (definite
-   miss) or its window is exhausted (definite hit).
+   and stops early the moment a query's count reaches the associativity
+   cap (definite miss) or its window is exhausted (definite hit).
+
+Single-pass factoring (:class:`StreamProfile`)
+----------------------------------------------
+Steps 1-2 — the duplicate collapse, the (line, time) sort, the
+previous-occurrence/cold arrays and the distinct-line count — depend only
+on the *demand stream*, not on ``sets``/``ways``.  They are factored into a
+:class:`StreamProfile` computed once per stream; the per-geometry residue
+is just the set partition plus the windowed scans.  When several requested
+configs share a set count, one scan capped at the *maximum* ``ways`` among
+them answers every config by thresholding (LRU inclusion: the capped count
+``c`` satisfies ``c < w  <=>  stack distance < w`` for every ``w <= cap``).
 
 Multi-level hierarchies factor exactly: level N+1's demand stream is level
 N's ordered miss sub-sequence, so each level is one independent replay.
+:func:`simulate_batch` walks the requested hierarchies as a tree of
+``(sets, ways)`` level prefixes — the L1 filter runs once and is reused by
+every LLC variant, the L1->L2 miss stream's profile is shared by every L3
+geometry, and so on.  The same sharing persists *across* calls through a
+per-trace-array memo (:class:`_TraceMemo`, keyed on array identity and
+revalidated by CRC), so even single-config ``simulate`` calls from a
+characterization sweep recompute nothing but the new level.
 
 The stream prefetcher is inherently sequential (its issue decisions feed
 back through L2 residency and a bounded ``prefetched`` set with arbitrary
 eviction order), so prefetcher configs run a hybrid: the vectorized L1
-filters the trace, then the *reference* L2/L3 + prefetcher objects replay
+filters the trace, then the *reference* L2 + prefetcher objects replay
 only the (much smaller) L1-miss stream — same objects, same order, hence
-bit-identical counters.
+bit-identical counters.  The feedback loop stops at L2 (prefetches fill
+L2 and probe only L2 residency; L3 state never influences an issue
+decision), so the L3 is *not* part of the sequential replay: the L2
+demand-miss stream it emits is memoized as just another tree node, its
+profile is shared, and every LLC geometry behind the same prefetcher —
+all NUCA sizes, all ``l3_factor`` scalings — replays vectorized without
+re-running the Python loop.
 """
 
 from __future__ import annotations
@@ -46,71 +71,127 @@ import zlib
 
 import numpy as np
 
-from .cachesim import WORDS_PER_LINE, HierarchyConfig, SimResult
+from .cachesim import (
+    WORDS_PER_LINE,
+    HierarchyConfig,
+    SimResult,
+    broadcast_l3_factor,
+    broadcast_names,
+)
 
-__all__ = ["simulate"]
+__all__ = ["simulate", "simulate_batch", "StreamProfile"]
 
 
-def _replay_level(lines: np.ndarray, sets: int, ways: int) -> tuple[np.ndarray, int]:
-    """Exact LRU hit mask for one cache level.
+class StreamProfile:
+    """Geometry-independent factorization of one demand stream.
 
-    ``lines`` is the level's demand stream (line addresses, time order).
-    Returns ``(hit_mask, distinct_lines)`` with ``hit_mask`` aligned to
-    ``lines``.
+    Holds everything :func:`_replay_ways` needs that does not depend on
+    ``sets``/``ways``: the consecutive-duplicate collapse, the previous
+    occurrence of each collapsed access, the cold (first-touch) mask and
+    the distinct-line count.  Computed once per stream; every cache
+    geometry the stream flows through reuses it.
     """
-    n = int(lines.size)
-    if n == 0:
-        return np.zeros(0, dtype=bool), 0
 
-    # -- 1. collapse consecutive duplicates (guaranteed hits) --------------
-    keep = np.empty(n, dtype=bool)
-    keep[0] = True
-    np.not_equal(lines[1:], lines[:-1], out=keep[1:])
-    cl = lines[keep]
-    m = int(cl.size)
+    __slots__ = ("n", "keep", "cl", "prev", "cold", "distinct")
 
-    # -- previous occurrence of the same line (collapsed-global index) -----
-    # Stable grouping by line: pack (line, time) into one int64 key when it
-    # fits (one fast introsort); otherwise fall back to lexsort.
-    shift = max(m - 1, 1).bit_length()
-    cmax = int(cl.max())
-    cmin = int(cl.min())
-    if cmin >= 0 and cmax < (1 << (62 - shift)):
-        order = np.argsort((cl << shift) | np.arange(m, dtype=np.int64))
-    else:
-        order = np.lexsort((np.arange(m, dtype=np.int64), cl))
-    sorted_lines = cl[order]
-    same = sorted_lines[1:] == sorted_lines[:-1]
-    prev = np.full(m, -1, dtype=np.int64)
-    prev[order[1:][same]] = order[:-1][same]
-    cold = prev < 0
-    distinct_total = int(cold.sum())
+    def __init__(self, lines: np.ndarray) -> None:
+        n = int(lines.size)
+        self.n = n
+        if n == 0:
+            self.keep = np.zeros(0, dtype=bool)
+            self.cl = lines
+            self.prev = np.zeros(0, dtype=np.int64)
+            self.cold = np.zeros(0, dtype=bool)
+            self.distinct = 0
+            return
 
-    hit_c = np.zeros(m, dtype=bool)
-    revisit = np.flatnonzero(~cold)
+        # -- collapse consecutive duplicates (guaranteed hits) -------------
+        keep = np.empty(n, dtype=bool)
+        keep[0] = True
+        np.not_equal(lines[1:], lines[:-1], out=keep[1:])
+        cl = lines[keep]
+        m = int(cl.size)
+
+        # -- previous occurrence of the same line (collapsed index) --------
+        # Stable grouping by line: pack (line, time) into one int64 key when
+        # it fits (one fast introsort); otherwise fall back to lexsort.
+        shift = max(m - 1, 1).bit_length()
+        cmax = int(cl.max())
+        cmin = int(cl.min())
+        if cmin >= 0 and cmax < (1 << (62 - shift)):
+            order = np.argsort((cl << shift) | np.arange(m, dtype=np.int64))
+        else:
+            order = np.lexsort((np.arange(m, dtype=np.int64), cl))
+        sorted_lines = cl[order]
+        same = sorted_lines[1:] == sorted_lines[:-1]
+        prev = np.full(m, -1, dtype=np.int64)
+        prev[order[1:][same]] = order[:-1][same]
+
+        self.keep = keep
+        self.cl = cl
+        self.prev = prev
+        self.cold = prev < 0
+        self.distinct = int(self.cold.sum())
+
+
+def _replay_ways(
+    profile: StreamProfile, sets: int, ways_list: list[int]
+) -> dict[int, np.ndarray]:
+    """Exact LRU hit masks for one set count at several associativities.
+
+    The expensive part — the contested-revisit stack-distance scan — runs
+    once, capped at ``max(ways_list)``; each requested ``ways`` is answered
+    by thresholding the capped distances (LRU inclusion).  Returns
+    ``{ways: hit_mask}`` with every mask aligned to the profile's original
+    (uncollapsed) stream.
+    """
+    ways_list = sorted(set(int(w) for w in ways_list))
+    m = int(profile.cl.size)
+    hit_c: dict[int, np.ndarray] = {w: np.zeros(m, dtype=bool)
+                                    for w in ways_list}
+    revisit = np.flatnonzero(~profile.cold)
     if revisit.size:
+        cl = profile.cl
         sidx = cl % sets
-        # -- 3. sets that never fill past `ways` never evict ---------------
-        per_set_distinct = np.bincount(sidx[cold], minlength=sets)
-        never_evicts = per_set_distinct <= ways
-        easy = never_evicts[sidx[revisit]]
-        hit_c[revisit[easy]] = True
+        # -- sets that never fill past `ways` never evict -------------------
+        per_set_distinct = np.bincount(sidx[profile.cold], minlength=sets)
+        psd_r = per_set_distinct[sidx[revisit]]
+        min_w, max_w = ways_list[0], ways_list[-1]
+        easy = psd_r <= min_w
         queries = revisit[~easy]
+        sd = None
         if queries.size:
-            hit_c[queries] = _contested_hits(cl, sidx, prev, queries,
-                                             sets, ways)
+            sd = _contested_sd(cl, sidx, profile.prev, queries, sets,
+                               cap=max_w, skip_below=min_w)
+        for w in ways_list:
+            hc = hit_c[w]
+            hc[revisit[easy]] = True
+            if sd is not None:
+                # A window in a set with <= w lifetime distinct lines has
+                # stack distance < w by construction, so thresholding the
+                # capped distance also covers the per-ways easy cases.
+                hc[queries[sd < w]] = True
 
-    hit_mask = np.ones(n, dtype=bool)
-    hit_mask[keep] = hit_c
-    return hit_mask, distinct_total
+    out = {}
+    for w in ways_list:
+        hit_mask = np.ones(profile.n, dtype=bool)
+        hit_mask[profile.keep] = hit_c[w]
+        out[w] = hit_mask
+    return out
 
 
-def _contested_hits(cl, sidx, prev, queries, sets, ways) -> np.ndarray:
-    """Stack distances for revisits in sets that do evict.
+def _contested_sd(cl, sidx, prev, queries, sets, cap, skip_below) -> np.ndarray:
+    """Capped stack distances for revisits in sets that do evict.
 
     Works in a set-major layout so every set's access history is one
-    contiguous slab, then counts window-first accesses per query window
-    in vectorized, geometrically growing chunks with early exit.
+    contiguous slab, then counts window-first accesses per query window in
+    vectorized, geometrically growing chunks.  The returned count ``c``
+    satisfies ``c == stack distance`` whenever the distance is ``< cap``
+    and ``c >= cap`` otherwise (the scan early-exits at ``cap``), so
+    ``c < w`` decides hit/miss exactly for every ``w <= cap``.  Windows
+    shorter than ``skip_below`` are not scanned at all: their distance is
+    bounded by the window length, hence ``< skip_below`` (a hit at every
+    requested associativity); their count is reported as 0.
     """
     m = int(cl.size)
     if sets <= (1 << 8):
@@ -138,28 +219,12 @@ def _contested_hits(cl, sidx, prev, queries, sets, ways) -> np.ndarray:
     win_lo = pos[prev[queries]] + 1
     win_hi = pos[queries]
 
-    hits = np.zeros(queries.size, dtype=bool)
-    # stack distance <= window length: short windows hit without scanning
-    short = win_hi - win_lo < ways
-    hits[short] = True
-    live = np.flatnonzero(~short)
-    count = np.zeros(queries.size, dtype=np.int64)
+    sd = np.zeros(queries.size, dtype=np.int64)
+    # stack distance <= window length: windows below the smallest
+    # associativity hit everywhere without scanning
+    live = np.flatnonzero(win_hi - win_lo >= skip_below)
 
-    if live.size:
-        # First chunk is exactly `ways` slots.  Every live window is at
-        # least that long, so no bounds mask is needed, and any window
-        # whose first `ways` slots are all window-firsts (the cyclic-sweep
-        # common case) resolves to a miss right here.
-        offs = np.arange(ways, dtype=np.int64)
-        idx = win_lo[live][:, None] + offs
-        count[live] = (q[idx] <= threshold[live][:, None]).sum(axis=1)
-        win_lo[live] += ways
-        exhausted = win_lo[live] >= win_hi[live]
-        missed = count[live] >= ways
-        hits[live[exhausted & ~missed]] = True
-        live = live[~(exhausted | missed)]
-
-    chunk = 2 * ways
+    chunk = max(int(skip_below), 1)
     while live.size:
         remaining = win_hi[live] - win_lo[live]
         ending = remaining <= chunk
@@ -167,26 +232,31 @@ def _contested_hits(cl, sidx, prev, queries, sets, ways) -> np.ndarray:
         enders = live[ending]
         if enders.size:
             # window finishes inside this chunk: masked gather (trimmed to
-            # the widest remainder), then the verdict is final (hit iff the
-            # total count stayed < ways)
+            # the widest remainder), then the count is final
             lo = win_lo[enders]
             span = win_hi[enders] - lo
             offs = np.arange(int(span.max()), dtype=np.int64)
             idx = np.minimum(lo[:, None] + offs, m - 1)
             first = (q[idx] <= threshold[enders][:, None]) & (offs < span[:, None])
-            total = count[enders] + first.sum(axis=1)
-            hits[enders[total < ways]] = True
+            sd[enders] += first.sum(axis=1)
 
         live = live[~ending]
         if live.size:
-            # full-chunk rows: no bounds mask needed
+            # full-chunk rows: no bounds mask needed (remaining > chunk)
             offs = np.arange(chunk, dtype=np.int64)
             idx = win_lo[live][:, None] + offs
-            count[live] += (q[idx] <= threshold[live][:, None]).sum(axis=1)
+            sd[live] += (q[idx] <= threshold[live][:, None]).sum(axis=1)
             win_lo[live] += chunk
-            live = live[count[live] < ways]   # monotone: >= ways is a miss
-        chunk *= 4
-    return hits
+            live = live[sd[live] < cap]   # monotone: >= cap is a miss at
+        chunk *= 4                        # every requested associativity
+    return sd
+
+
+def _replay_level(lines: np.ndarray, sets: int, ways: int) -> tuple[np.ndarray, int]:
+    """Exact LRU hit mask for one cache level (single-geometry wrapper)."""
+    profile = StreamProfile(lines)
+    mask = _replay_ways(profile, sets, [ways])[ways]
+    return mask, profile.distinct
 
 
 def _effective_levels(config: HierarchyConfig, l3_factor: float):
@@ -196,83 +266,174 @@ def _effective_levels(config: HierarchyConfig, l3_factor: float):
     return level_cfgs
 
 
-# First-level replay cache.  A characterization sweep runs the *same* trace
-# array through several hierarchies (host / host+pf / NDP / NUCA, multiple
-# l3_factors) that all share the 32 KB/8-way L1, so the L1 filter — the
-# largest stream by far — is recomputed needlessly.  Keyed on the address
-# array's *identity* (the memoized SimEngine hands out one ndarray per
-# trace) plus the L1 geometry.  A CRC of the full buffer is re-checked on
-# every hit (~100x cheaper than the replay it saves), so a caller that
-# mutates its array in place gets a recompute, not stale counters.
-# Guarded by a lock: ``SimEngine.sweep_parallel`` calls in from worker
-# threads.
-_L1_CACHE: list[tuple] = []
-_L1_CACHE_MAX = 8
-_L1_CACHE_LOCK = threading.Lock()
+# --------------------------------------------------------------------------
+# Per-trace memo: profiles + per-level results keyed by geometry prefix.
+# --------------------------------------------------------------------------
+class _TraceMemo:
+    """Reusable state for one trace array across hierarchies and calls.
+
+    A characterization sweep runs the *same* trace array through many
+    hierarchy variants (host / host+pf / NDP / NUCA, several l3_factors)
+    that share level prefixes — all share the 32 KB/8-way L1, the host
+    variants share L1+L2, and every LLC geometry consumes the same L2-miss
+    stream.  The memo stores, per level *prefix* (a tuple of
+    ``(sets, ways)`` LRU nodes and ``("pf", sets, ways, degree, streams)``
+    prefetcher nodes):
+
+    - ``levels[prefix]``: the (hit count, miss stream) of the prefix's
+      last node — the miss stream is the next level's demand stream;
+    - ``profiles[prefix]``: the :class:`StreamProfile` of the demand
+      stream entering the next level, shared by every geometry simulated
+      at that depth;
+    - ``pf_extras[prefix]``: a prefetcher node's (issued, useful)
+      counters.
+
+    Keyed on the address array's *identity* (the memoized SimEngine hands
+    out one ndarray per trace); a CRC of the full buffer is re-checked on
+    every lookup (~100x cheaper than the replay it saves), so a caller
+    that mutates its array in place gets a recompute, not stale counters.
+    ``lock`` serializes computation per trace — concurrent
+    ``SimEngine.simulate_batch`` workers on *different* traces proceed in
+    parallel, while two workers on the same trace share one computation
+    instead of duplicating it.
+    """
+
+    __slots__ = ("ref", "crc", "lines", "profiles", "levels", "pf_extras",
+                 "lock")
+
+    def __init__(self, addr: np.ndarray) -> None:
+        self.ref = addr
+        self.crc = _fingerprint(addr)
+        self.lines: np.ndarray | None = None
+        self.profiles: dict[tuple, StreamProfile] = {}
+        self.levels: dict[tuple, tuple[int, np.ndarray]] = {}
+        self.pf_extras: dict[tuple, tuple[int, int]] = {}
+        self.lock = threading.RLock()
+
+    def stream(self, prefix: tuple) -> np.ndarray:
+        """Demand stream entering the node after ``prefix``."""
+        if not prefix:
+            if self.lines is None:
+                self.lines = self.ref // WORDS_PER_LINE
+            return self.lines
+        return self.levels[prefix][1]
+
+    def profile(self, prefix: tuple) -> StreamProfile:
+        p = self.profiles.get(prefix)
+        if p is None:
+            p = StreamProfile(self.stream(prefix))
+            self.profiles[prefix] = p
+        return p
+
+    def results(self, prefix: tuple, sets: int,
+                ways_list: list[int]) -> dict[int, tuple[int, np.ndarray]]:
+        """(hits, miss stream) for each ``ways`` at one (prefix, sets).
+
+        Missing associativities are computed in one capped scan; already
+        memoized ones are recalled.  The caller must have materialized
+        ``prefix`` itself (parents are walked root-first).
+        """
+        out: dict[int, tuple[int, np.ndarray]] = {}
+        missing: list[int] = []
+        for w in dict.fromkeys(ways_list):  # dedupe, keep order
+            got = self.levels.get(prefix + ((sets, w),))
+            if got is not None:
+                out[w] = got
+            else:
+                missing.append(w)
+        if missing:
+            stream = self.stream(prefix)
+            masks = _replay_ways(self.profile(prefix), sets, missing)
+            for w in missing:
+                mask = masks[w]
+                res = (int(mask.sum()), stream[~mask])
+                self.levels[prefix + ((sets, w),)] = res
+                out[w] = res
+        return out
+
+    def pf_result(self, prefix: tuple,
+                  node: tuple) -> tuple[int, np.ndarray, int, int]:
+        """(L2 hits, L2-miss stream, issued, useful) for one prefetcher
+        node over the ``prefix`` miss stream, memoized.
+
+        All LLC variants behind the same (L2 geometry, prefetcher
+        parameters) share this one sequential replay — the prefetcher's
+        feedback loop stops at L2, so the emitted demand-miss stream is
+        LLC-independent.
+        """
+        key = prefix + (node,)
+        got = self.levels.get(key)
+        if got is None:
+            _, sets, ways, degree, streams = node
+            hits, miss_stream, issued, useful = _pf_l2_replay(
+                self.stream(prefix), sets, ways, degree, streams)
+            self.levels[key] = got = (hits, miss_stream)
+            self.pf_extras[key] = (issued, useful)
+        return got[0], got[1], *self.pf_extras[key]
+
+
+_MEMO_MAX = 8
+_MEMOS: list[_TraceMemo] = []
+_MEMOS_LOCK = threading.Lock()
 
 
 def _fingerprint(addr: np.ndarray) -> int:
     return zlib.crc32(memoryview(np.ascontiguousarray(addr)).cast("B"))
 
 
-def _first_level(addr: np.ndarray, cfg) -> tuple[np.ndarray, int, int]:
-    """(miss_lines, hits, distinct_lines) of the first level, memoized."""
-    with _L1_CACHE_LOCK:
-        for i, entry in enumerate(_L1_CACHE):
-            ref, sets, ways, crc, miss_lines, hits, distinct = entry
-            if ref is addr and sets == cfg.sets and ways == cfg.ways:
-                if crc == _fingerprint(addr):
-                    return miss_lines, hits, distinct
-                del _L1_CACHE[i]  # array was mutated in place: recompute
+def _memo_for(addr: np.ndarray) -> _TraceMemo:
+    """The trace memo for ``addr``, CRC-revalidated and LRU-bounded."""
+    with _MEMOS_LOCK:
+        for i, memo in enumerate(_MEMOS):
+            if memo.ref is addr:
+                if memo.crc == _fingerprint(addr):
+                    if i != len(_MEMOS) - 1:
+                        _MEMOS.append(_MEMOS.pop(i))  # refresh LRU slot
+                    return memo
+                del _MEMOS[i]  # array was mutated in place: recompute
                 break
-    lines = addr // WORDS_PER_LINE
-    hit_mask, distinct = _replay_level(lines, cfg.sets, cfg.ways)
-    miss_lines = lines[~hit_mask]
-    hits = int(hit_mask.sum())
-    with _L1_CACHE_LOCK:
-        _L1_CACHE.append(
-            (addr, cfg.sets, cfg.ways, _fingerprint(addr), miss_lines, hits,
-             distinct)
-        )
-        while len(_L1_CACHE) > _L1_CACHE_MAX:
-            _L1_CACHE.pop(0)
-    return miss_lines, hits, distinct
+        memo = _TraceMemo(addr)
+        _MEMOS.append(memo)
+        while len(_MEMOS) > _MEMO_MAX:
+            _MEMOS.pop(0)
+        return memo
 
 
-def _hybrid_pf_replay(stream: np.ndarray, level_cfgs, config: HierarchyConfig):
-    """Sequential L2/L3 + stream-prefetcher replay over the L1-miss stream.
+def _pf_l2_replay(stream: np.ndarray, l2_nsets: int, l2_ways: int,
+                  degree: int, stream_cap: int):
+    """Sequential L2 + stream-prefetcher replay over the L1-miss stream.
 
     The prefetcher's issue decisions feed back through L2 residency and a
     bounded ``prefetched`` set whose eviction order is a Python-set
-    ``pop()``, so this path cannot vectorize without changing counters.
-    It is the reference algorithm with the dict/set operations inlined
-    (~2x the reference loop's throughput), applied to a stream the
-    vectorized L1 has already shrunk.  Counter equivalence with
+    ``pop()``, so this loop cannot vectorize without changing counters.
+    It is the reference algorithm with the dict/set operations inlined,
+    applied to a stream the vectorized L1 has already shrunk — and *only*
+    the feedback participants: the L3 never influences an issue decision
+    (prefetches probe and fill L2 alone), so instead of simulating it
+    here, the L2 demand-miss stream is returned for a vectorized LLC
+    replay shared across every L3 geometry.  Counter equivalence with
     ``cachesim.simulate`` is asserted by the differential harness.
+
+    Returns ``(l2_hits, l2_miss_stream, issued, useful)``.
     """
-    caches = [
-        ([dict() for _ in range(c.sets)], c.sets, c.ways) for c in level_cfgs
-    ]
-    hits = [0] * len(level_cfgs)
-    misses = [0] * len(level_cfgs)
-    l2_sets, l2_nsets, l2_ways = caches[0]
-    stream_cap = config.prefetch_streams
-    degree = config.prefetch_degree
+    l2_sets = [dict() for _ in range(l2_nsets)]
+    hits = 0
+    miss_stream: list[int] = []
+    add_miss = miss_stream.append
     last: dict[int, int] = {}       # stream-buffer: region -> last miss line
     issued = 0
     useful = 0
     prefetched: set[int] = set()
 
     for line in stream.tolist():
-        for li, (sets_list, nsets, ways) in enumerate(caches):
-            s = sets_list[line % nsets]
-            if line in s:
-                del s[line]         # refresh recency
-                s[line] = None
-                hits[li] += 1
-                break
-            misses[li] += 1
-            if len(s) >= ways:
+        s = l2_sets[line % l2_nsets]
+        if line in s:
+            del s[line]             # refresh recency
+            s[line] = None
+            hits += 1
+        else:
+            add_miss(line)          # the L3's demand stream, in order
+            if len(s) >= l2_ways:
                 s.pop(next(iter(s)))  # evict LRU (first key)
             s[line] = None
 
@@ -298,7 +459,118 @@ def _hybrid_pf_replay(stream: np.ndarray, level_cfgs, config: HierarchyConfig):
                 prefetched.add(pline)
                 if len(prefetched) > 4096:
                     prefetched.pop()
-    return hits, misses, issued, useful
+    return hits, np.asarray(miss_stream, dtype=np.int64), issued, useful
+
+
+def simulate_batch(
+    addresses: np.ndarray,
+    configs,
+    *,
+    ai_ops_per_access: float = 1.0,
+    instr_per_access: float = 2.0,
+    l3_factor=1.0,
+    names=None,
+) -> list[SimResult]:
+    """Run one trace through many hierarchy configs in a single pass.
+
+    ``configs`` is a sequence of :class:`HierarchyConfig`; ``l3_factor``
+    is a scalar shared by all of them or a per-config sequence.  Counters
+    are exactly those of per-config :func:`simulate` calls (and hence of
+    the reference loop), but shared level prefixes — the same L1 in every
+    paper hierarchy, the same L1+L2 in every LLC variant — are replayed
+    once, and geometries differing only in associativity share one capped
+    stack-distance scan.
+    """
+    configs = list(configs)
+    if not configs:
+        return []
+    addr = np.asarray(addresses, dtype=np.int64)
+    factors = broadcast_l3_factor(l3_factor, len(configs))
+    names = broadcast_names(names, len(configs))
+
+    # Per-request node plan: LRU levels are ``(sets, ways)``; a prefetcher
+    # config replaces its L2 with a ``("pf", sets, ways, degree, streams)``
+    # node — the sequential L2+prefetcher replay — and its remaining LLC
+    # levels stay vectorized over that node's demand-miss stream.
+    plans: list[tuple] = []
+    for cfg, f in zip(configs, factors):
+        level_cfgs = _effective_levels(cfg, f)
+        if cfg.prefetcher and len(level_cfgs) >= 2:
+            plan = ((level_cfgs[0].sets, level_cfgs[0].ways),
+                    ("pf", level_cfgs[1].sets, level_cfgs[1].ways,
+                     cfg.prefetch_degree, cfg.prefetch_streams),
+                    *((c.sets, c.ways) for c in level_cfgs[2:]))
+        else:
+            plan = tuple((c.sets, c.ways) for c in level_cfgs)
+        plans.append(plan)
+
+    memo = _memo_for(addr)
+    level_counts: list[list[tuple[int, int]]] = [[] for _ in plans]
+    pf_meta: list[tuple[int, int]] = [(0, 0)] * len(plans)
+
+    with memo.lock:
+        lines_touched = memo.profile(()).distinct
+
+        def walk(prefix: tuple, items: list[tuple[int, tuple]]) -> None:
+            """Group ``items`` (request idx, remaining nodes) by the next
+            node, replay each LRU group's associativities in one capped
+            scan (prefetcher nodes run their memoized sequential loop),
+            recurse into each distinct miss stream."""
+            stream_len = int(memo.stream(prefix).size)
+            lru: dict[int, list[tuple[int, tuple]]] = {}
+            pf: dict[tuple, list[tuple[int, tuple]]] = {}
+            for i, rem in items:
+                node = rem[0]
+                if node[0] == "pf":
+                    pf.setdefault(node, []).append((i, rem))
+                else:
+                    lru.setdefault(node[0], []).append((i, rem))
+
+            for sets, group in lru.items():
+                res = memo.results(prefix, sets,
+                                   [rem[0][1] for _, rem in group])
+                by_ways: dict[int, list[tuple[int, tuple]]] = {}
+                for i, rem in group:
+                    by_ways.setdefault(rem[0][1], []).append((i, rem))
+                for w, sub in by_ways.items():
+                    hits = res[w][0]
+                    deeper = []
+                    for i, rem in sub:
+                        level_counts[i].append((hits, stream_len - hits))
+                        if len(rem) > 1:
+                            deeper.append((i, rem[1:]))
+                    if deeper:
+                        walk(prefix + ((sets, w),), deeper)
+
+            for node, group in pf.items():
+                hits, _, issued, useful = memo.pf_result(prefix, node)
+                deeper = []
+                for i, rem in group:
+                    level_counts[i].append((hits, stream_len - hits))
+                    pf_meta[i] = (issued, useful)
+                    if len(rem) > 1:
+                        deeper.append((i, rem[1:]))
+                if deeper:
+                    walk(prefix + (node,), deeper)
+
+        walk((), list(enumerate(plans)))
+
+    n = int(addr.size)
+    instructions = int(round(n * max(1.0, instr_per_access)))
+    out: list[SimResult] = []
+    for i, cfg in enumerate(configs):
+        out.append(SimResult(
+            name=names[i] or cfg.name,
+            accesses=n,
+            instructions=instructions,
+            ai=float(ai_ops_per_access),
+            level_misses=tuple(m for _, m in level_counts[i]),
+            level_hits=tuple(h for h, _ in level_counts[i]),
+            lines_touched=lines_touched,
+            prefetch_issued=pf_meta[i][0],
+            prefetch_useful=pf_meta[i][1],
+        ))
+    return out
 
 
 def simulate(
@@ -311,41 +583,11 @@ def simulate(
     name: str | None = None,
 ) -> SimResult:
     """Vectorized drop-in for :func:`repro.core.cachesim.simulate`."""
-    addr = np.asarray(addresses, dtype=np.int64)
-    level_cfgs = _effective_levels(config, l3_factor)
-
-    pf_issued = 0
-    pf_useful = 0
-
-    hybrid_pf = config.prefetcher and len(level_cfgs) >= 2
-    vector_levels = level_cfgs[:1] if hybrid_pf else level_cfgs
-
-    stream, l1_hits, lines_touched = _first_level(addr, level_cfgs[0])
-    hits: list[int] = [l1_hits]
-    misses: list[int] = [int(addr.size) - l1_hits]
-    for cfg in vector_levels[1:]:
-        hit_mask, _ = _replay_level(stream, cfg.sets, cfg.ways)
-        level_hits = int(hit_mask.sum())
-        hits.append(level_hits)
-        misses.append(int(stream.size) - level_hits)
-        stream = stream[~hit_mask]
-
-    if hybrid_pf:
-        lvl_hits, lvl_misses, pf_issued, pf_useful = _hybrid_pf_replay(
-            stream, level_cfgs[1:], config)
-        hits.extend(lvl_hits)
-        misses.extend(lvl_misses)
-
-    n = int(addr.size)
-    instructions = int(round(n * max(1.0, instr_per_access)))
-    return SimResult(
-        name=name or config.name,
-        accesses=n,
-        instructions=instructions,
-        ai=float(ai_ops_per_access),
-        level_misses=tuple(misses),
-        level_hits=tuple(hits),
-        lines_touched=lines_touched,
-        prefetch_issued=pf_issued,
-        prefetch_useful=pf_useful,
-    )
+    return simulate_batch(
+        addresses,
+        [config],
+        ai_ops_per_access=ai_ops_per_access,
+        instr_per_access=instr_per_access,
+        l3_factor=l3_factor,
+        names=[name],
+    )[0]

@@ -139,19 +139,31 @@ def accelerator_study(workload: Workload, *, seed: int = 0,
 def core_model_study(workload: Workload, *, seed: int = 0,
                      engine=None) -> dict[str, float]:
     """Speedups of NDP+in-order (128 cores) and NDP+OoO (6 cores) over a
-    4-core OoO host (the paper's iso-area/power budgets)."""
+    4-core OoO host (the paper's iso-area/power budgets).
+
+    Exactly the three needed cells run as one engine batch (the old
+    per-point ``analyze`` round-trips simulated nine); the timing model is
+    applied per point via :func:`scalability.evaluate_point`.
+    """
     engine = _engine_or_new(engine)
+    from .cachesim import host_config
 
-    def perf(cfg: str, cores: int, core_model: str) -> float:
-        r = scalability.analyze(
-            workload, core_model=core_model, cores=(cores,), seed=seed,
-            engine=engine,
-        )
-        return r.points[cfg][0].perf
+    cells = [(4, host_config(4)), (6, ndp_config(6)), (128, ndp_config(128))]
+    sims = engine.simulate_batch(workload, cells, seed=seed)
 
-    host = perf("host", 4, "ooo")
-    ndp_ooo = perf("ndp", 6, "ooo")
-    ndp_io = perf("ndp", 128, "inorder")
+    def perf(i: int, *, ndp: bool, core_model: str) -> float:
+        cores = cells[i][0]
+        spec = engine.trace(workload, cores, seed=seed)
+        ipc = (scalability.OOO_IPC if core_model == "ooo"
+               else scalability.INORDER_IPC)
+        mlp_cap = (scalability.OOO_MLP_CAP if core_model == "ooo"
+                   else scalability.INORDER_MLP_CAP)
+        return scalability.evaluate_point(
+            sims[i], spec, cores, ndp=ndp, ipc=ipc, mlp_cap=mlp_cap).perf
+
+    host = perf(0, ndp=False, core_model="ooo")
+    ndp_ooo = perf(1, ndp=True, core_model="ooo")
+    ndp_io = perf(2, ndp=True, core_model="inorder")
     return {
         "ndp_inorder_128": float(ndp_io / host),
         "ndp_ooo_6": float(ndp_ooo / host),

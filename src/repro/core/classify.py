@@ -97,7 +97,10 @@ def measure(workload: Workload, *, seed: int = 0,
     temporal = locality.temporal_locality(spec1.addresses)
     spatial = locality.spatial_locality(spec1.addresses)
 
-    sims = engine.sweep_parallel(workload, cores, cachesim.host_config, seed=seed)
+    # One batch for the host core sweep: the engine fans the distinct
+    # traces across workers and recalls any already-memoized cells.
+    sims = engine.simulate_batch(
+        workload, [(c, cachesim.host_config(c)) for c in cores], seed=seed)
     lfmrs = [s.lfmr for s in sims]
     # MPKI baseline is the 4-core host (the paper's Step-1 machine); for a
     # custom sweep without 4, fall back to the closest core count rather

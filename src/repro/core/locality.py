@@ -50,7 +50,13 @@ def _as_word_addresses(addresses: np.ndarray) -> np.ndarray:
 
 
 def spatial_locality(addresses: np.ndarray, window: int = DEFAULT_WINDOW) -> float:
-    """DAMOV Eq. 1 over a 1-D trace of word addresses."""
+    """DAMOV Eq. 1 over a 1-D trace of word addresses.
+
+    Single pass: the trace is reshaped to ``(n_windows, window)`` and every
+    window's minimum positive stride — the minimum adjacent difference of
+    the sorted window — is extracted with one row-wise sort and one masked
+    row-min, instead of a per-window Python loop.
+    """
     addr = _as_word_addresses(addresses)
     n = addr.size
     if n < 2:
@@ -59,18 +65,17 @@ def spatial_locality(addresses: np.ndarray, window: int = DEFAULT_WINDOW) -> flo
     n_windows = n // window
     if n_windows == 0:
         # Single short window: use the whole trace.
-        chunks = [addr]
+        rows = addr[np.newaxis, :]
+        n_windows = 1
     else:
-        chunks = np.split(addr[: n_windows * window], n_windows)
+        rows = addr[: n_windows * window].reshape(n_windows, window)
 
-    strides = np.empty(len(chunks), dtype=np.int64)
-    for k, chunk in enumerate(chunks):
-        # Minimum distance between any two addresses in the window is the
-        # minimum adjacent difference of the sorted window.
-        s = np.sort(chunk)
-        d = np.diff(s)
-        d = d[d > 0]
-        strides[k] = int(d.min()) if d.size else 0
+    d = np.diff(np.sort(rows, axis=1), axis=1)
+    # Minimum *positive* adjacent difference per window; all-identical
+    # windows (no positive diff) yield stride 0.
+    sentinel = np.iinfo(np.int64).max
+    strides = np.where(d > 0, d, sentinel).min(axis=1)
+    strides[strides == sentinel] = 0
 
     # stride 0 (all-identical window) carries no *spatial* information; the
     # paper's stride profile bins start at 1.
@@ -78,7 +83,7 @@ def spatial_locality(addresses: np.ndarray, window: int = DEFAULT_WINDOW) -> flo
     if strides.size == 0:
         return 0.0
     uniq, counts = np.unique(strides, return_counts=True)
-    frac = counts / float(len(chunks))
+    frac = counts / float(n_windows)
     return float(np.sum(frac / uniq))
 
 
@@ -90,19 +95,34 @@ def temporal_locality(addresses: np.ndarray, window: int = DEFAULT_WINDOW) -> fl
         return 0.0
     window = max(2, int(window))
     n_windows = max(1, n // window)
-    chunks = np.split(addr[: n_windows * window], n_windows) if n >= window else [addr]
+    if n >= window:
+        flat = np.sort(
+            addr[: n_windows * window].reshape(n_windows, window), axis=1
+        ).ravel()
+        row_len = window
+    else:
+        flat = np.sort(addr)
+        row_len = n
+
+    # Per-window occurrence counts in one pass: sort each window (row-wise),
+    # flatten, and measure run lengths — forcing a run break at every row
+    # boundary so runs never leak across windows.
+    start = np.ones(flat.size, dtype=bool)
+    np.not_equal(flat[1:], flat[:-1], out=start[1:])
+    start[::row_len] = True
+    idx = np.flatnonzero(start)
+    counts = np.diff(idx, append=flat.size)
 
     # reuse_profile[i] accumulates addresses reused N times with
     # floor(log2(N)) == i (N >= 1 extra occurrences beyond the first).
     max_bins = int(np.ceil(np.log2(window))) + 2
-    reuse_profile = np.zeros(max_bins, dtype=np.int64)
-    for chunk in chunks:
-        _, counts = np.unique(chunk, return_counts=True)
-        repeats = counts - 1  # N: times an address is *re*-used
-        repeats = repeats[repeats > 0]
-        if repeats.size:
-            bins = np.floor(np.log2(repeats)).astype(np.int64)
-            np.add.at(reuse_profile, bins, 1)
+    repeats = counts - 1  # N: times an address is *re*-used
+    repeats = repeats[repeats > 0]
+    if repeats.size:
+        bins = np.floor(np.log2(repeats)).astype(np.int64)
+        reuse_profile = np.bincount(bins, minlength=max_bins)
+    else:
+        reuse_profile = np.zeros(max_bins, dtype=np.int64)
 
     total = float(addr[: n_windows * window].size if n >= window else n)
     weights = 2.0 ** np.arange(max_bins)

@@ -40,6 +40,7 @@ __all__ = [
     "SystemPoint",
     "ScalabilityResult",
     "analyze",
+    "evaluate_point",
     "sweep_configs",
     "HOST_PEAK_GBS",
     "NDP_PEAK_GBS",
@@ -137,7 +138,7 @@ def _amat_and_stalls(
     return amat, stall
 
 
-def _evaluate(
+def evaluate_point(
     sim: SimResult,
     spec: TraceSpec,
     cores: int,
@@ -147,7 +148,12 @@ def _evaluate(
     mlp_cap: float,
     nuca_hops: float = 0.0,
 ) -> SystemPoint:
-    """Timing/energy model over one already-simulated cell."""
+    """Timing/energy model over one already-simulated cell.
+
+    Public so consumers that batch their own cells (e.g. the §5.3
+    iso-area core-model study) can evaluate exactly the cells they need
+    instead of round-tripping through a full :func:`analyze` sweep.
+    """
     peak_gbs = NDP_PEAK_GBS if ndp else HOST_PEAK_GBS
     peak_bytes_per_cycle = peak_gbs * 1e9 / CLOCK_HZ
 
@@ -224,6 +230,7 @@ def analyze(
     cells are core-model independent, so a shared engine serves the ``ooo``
     and ``inorder`` analyses (and ``classify.measure``) from one pass.
     """
+    cores = tuple(cores)
     if engine is None:
         from repro.study.engine import SimEngine  # lazy: core stays a leaf
         engine = SimEngine()
@@ -236,15 +243,21 @@ def analyze(
         core_model=core_model,
     )
     factories = sweep_configs(nuca=nuca)
-    for cfg_name, factory in factories.items():
+    # One batch for the whole (config x cores) grid: the engine groups the
+    # missing cells by trace, so each core count's host / host+pf / NDP
+    # variants share a single replay of their common level prefixes.
+    cells = [
+        (c, factory(c)) for factory in factories.values() for c in cores
+    ]
+    sims = engine.simulate_batch(workload, cells, seed=seed)
+    for k, (cfg_name, _) in enumerate(factories.items()):
         is_ndp = cfg_name == "ndp"
-        sims = engine.sweep_parallel(workload, cores, factory, seed=seed)
         pts: list[SystemPoint] = []
-        for c, sim in zip(cores, sims):
+        for c, sim in zip(cores, sims[k * len(cores):(k + 1) * len(cores)]):
             spec = engine.trace(workload, c, seed=seed)
             nuca_hops = (np.sqrt(c) * 1.5) if (nuca and not is_ndp) else 0.0
             pts.append(
-                _evaluate(
+                evaluate_point(
                     sim, spec, c,
                     ndp=is_ndp, ipc=ipc, mlp_cap=mlp_cap, nuca_hops=nuca_hops,
                 )

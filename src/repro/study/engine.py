@@ -14,6 +14,9 @@ scratch.
   where the hierarchy is the frozen :class:`~repro.core.cachesim.HierarchyConfig`
   itself (content, not identity — two structurally equal configs share a
   cell);
+- :meth:`SimEngine.simulate_batch` accepts many ``(cores, hierarchy)``
+  cells at once, groups the missing ones by trace and hands each group to
+  the backend's batched single pass (shared level prefixes replayed once);
 - :class:`EngineStats` counts hits/misses for both layers, so callers can
   assert sharing actually happened.
 
@@ -175,8 +178,8 @@ class SimEngine:
         """One un-memoized simulation.
 
         Writes nothing on the engine, so workers may run it concurrently;
-        the vectorized backend's module-level L1-filter cache is the one
-        piece of shared state underneath, and it takes its own lock.
+        the vectorized backend's module-level per-trace memo is the one
+        piece of shared state underneath, and it takes its own locks.
         """
         return cachesim.simulate(
             spec.addresses,
@@ -187,6 +190,95 @@ class SimEngine:
             name=hierarchy.name,
             backend=self.backend,
         )
+
+    def _run_group(
+        self, workload: Workload, spec: TraceSpec,
+        hierarchies: list[HierarchyConfig],
+    ) -> list[SimResult]:
+        """All of one trace's un-memoized cells in a single backend pass.
+
+        On the vectorized backend this is the batched single pass (shared
+        level prefixes replayed once, same-set-count geometries answered
+        from one capped scan); on the reference backend it is the
+        equivalent per-config loop — counter-identical either way.
+        """
+        return cachesim.simulate_batch(
+            spec.addresses,
+            hierarchies,
+            ai_ops_per_access=workload.ai_ops_per_access,
+            instr_per_access=workload.instr_per_access,
+            l3_factor=spec.l3_factor,
+            backend=self.backend,
+        )
+
+    def simulate_batch(
+        self,
+        workload: Workload,
+        cells: Iterable[tuple[int, HierarchyConfig]],
+        *,
+        seed: int = 0,
+        max_workers: int | None = None,
+        executor: Executor | None = None,
+    ) -> list[SimResult]:
+        """Run (or recall) many ``(cores, hierarchy)`` cells in one call.
+
+        The missing cells are grouped by trace — every distinct core count
+        is one trace — and each group runs through the backend's batched
+        single pass, so a trace's shared level prefixes (the same L1 in
+        every paper hierarchy, the same L1+L2 in every LLC variant) are
+        replayed once instead of once per hierarchy.  Groups are fanned
+        across an executor exactly like :meth:`sweep_parallel` (threads;
+        NumPy releases the GIL in the backend's hot loops).  Results,
+        memoization and stats accounting are identical to per-cell
+        :meth:`simulate` calls.
+        """
+        self.register(workload)
+        cells = list(cells)
+        keys = [CellKey(workload.name, seed, c, h) for c, h in cells]
+        specs = {c: self.trace(workload, c, seed=seed) for c, _ in cells}
+
+        missing: dict[CellKey, tuple[int, HierarchyConfig]] = {}
+        hits = 0
+        for key, (c, h) in zip(keys, cells):
+            if key in self._sims:
+                hits += 1
+            elif key in missing:
+                hits += 1  # duplicate cell within this batch: one run
+            else:
+                missing[key] = (c, h)
+
+        if missing:
+            groups: dict[int, list[tuple[CellKey, HierarchyConfig]]] = {}
+            for key, (c, h) in missing.items():
+                groups.setdefault(c, []).append((key, h))
+
+            def run(c: int, batch: list[tuple[CellKey, HierarchyConfig]]):
+                return self._run_group(workload, specs[c],
+                                       [h for _, h in batch])
+
+            if len(groups) == 1 and executor is None:
+                (c, batch), = groups.items()
+                for (key, _), sim in zip(batch, run(c, batch)):
+                    self._sims[key] = sim
+            else:
+                own_pool = executor is None
+                pool = executor if executor is not None else ThreadPoolExecutor(
+                    max_workers=max_workers or min(os.cpu_count() or 1, 8)
+                )
+                try:
+                    futures = [
+                        (batch, pool.submit(run, c, batch))
+                        for c, batch in groups.items()
+                    ]
+                    for batch, fut in futures:
+                        for (key, _), sim in zip(batch, fut.result()):
+                            self._sims[key] = sim
+                finally:
+                    if own_pool:
+                        pool.shutdown()
+            self.stats.sim_runs += len(missing)
+        self.stats.sim_hits += hits
+        return [self._sims[key] for key in keys]
 
     def sweep(
         self,
@@ -214,50 +306,25 @@ class SimEngine:
     ) -> list[SimResult]:
         """:meth:`sweep`, with the missing cells fanned across an executor.
 
-        Results, memoization and stats accounting are identical to the
-        sequential sweep — each missing cell is simulated exactly once and
-        stored; already-cached cells are recalled.  Traces are materialized
-        up front (memoized, sequential) so workers share read-only state.
-        ``executor`` lets callers supply a pool (e.g. one shared across
-        sweeps); otherwise a :class:`~concurrent.futures.ThreadPoolExecutor`
-        with ``max_workers`` (default: cpu count, capped at 8) is used.
-        NumPy releases the GIL in the vectorized backend's hot loops, so
+        A thin wrapper over :meth:`simulate_batch`: results, memoization
+        and stats accounting are identical to the sequential sweep — each
+        missing cell is simulated exactly once and stored; already-cached
+        cells are recalled.  Traces are materialized up front (memoized,
+        sequential) so workers share read-only state.  ``executor`` lets
+        callers supply a pool (e.g. one shared across sweeps); otherwise a
+        :class:`~concurrent.futures.ThreadPoolExecutor` with
+        ``max_workers`` (default: cpu count, capped at 8) is used.  NumPy
+        releases the GIL in the vectorized backend's hot loops, so
         threads — which can share the engine's caches — are the right
         executor type.
         """
-        self.register(workload)
-        cells = [(c, config_factory(c)) for c in cores]
-        specs = {c: self.trace(workload, c, seed=seed) for c, _ in cells}
-        keys = [CellKey(workload.name, seed, c, h) for c, h in cells]
-
-        missing: dict[CellKey, tuple[int, HierarchyConfig]] = {}
-        hits = 0
-        for key, (c, h) in zip(keys, cells):
-            if key in self._sims:
-                hits += 1
-            elif key in missing:
-                hits += 1  # duplicate cell within this sweep: one run
-            else:
-                missing[key] = (c, h)
-
-        if missing:
-            own_pool = executor is None
-            pool = executor if executor is not None else ThreadPoolExecutor(
-                max_workers=max_workers or min(os.cpu_count() or 1, 8)
-            )
-            try:
-                futures = {
-                    key: pool.submit(self._run_cell, workload, specs[c], h)
-                    for key, (c, h) in missing.items()
-                }
-                for key, fut in futures.items():
-                    self._sims[key] = fut.result()
-            finally:
-                if own_pool:
-                    pool.shutdown()
-            self.stats.sim_runs += len(missing)
-        self.stats.sim_hits += hits
-        return [self._sims[key] for key in keys]
+        return self.simulate_batch(
+            workload,
+            [(c, config_factory(c)) for c in cores],
+            seed=seed,
+            max_workers=max_workers,
+            executor=executor,
+        )
 
     # ---- introspection --------------------------------------------------
     @property

@@ -15,6 +15,12 @@ Examples::
 
     # JSON, custom store location, engine stats
     python -m repro.suite --format json --store /tmp/suite-store --stats
+
+    # full roster with whole entries fanned across one process per CPU
+    python -m repro.suite --processes 0
+
+    # prune store records from old schema versions
+    python -m repro.suite --gc
 """
 
 from __future__ import annotations
@@ -52,11 +58,20 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--backend", choices=BACKENDS, default=None,
                     help="cache-simulation implementation; default: "
                          "$REPRO_SIM_BACKEND or 'vectorized'")
+    ap.add_argument("--processes", type=int, default=1, metavar="N",
+                    help="fan whole entries across N worker processes "
+                         "(0 = one per CPU; default 1 = in-process)")
     ap.add_argument("--store", default=None, metavar="DIR",
                     help="result-store root (default $REPRO_SUITE_STORE "
                          f"or {default_store_root()})")
     ap.add_argument("--no-store", action="store_true",
                     help="do not read or write the on-disk result store")
+    ap.add_argument("--gc", action="store_true",
+                    help="prune result-store records from old schema "
+                         "versions (their keys are unreachable under the "
+                         "current schema) plus corrupt records, then "
+                         "exit; the store is a cache, so pruning is "
+                         "always safe")
     ap.add_argument("--list", action="store_true",
                     help="print the roster entries without simulating")
     ap.add_argument("--check", action="store_true",
@@ -75,6 +90,19 @@ def main(argv: list[str] | None = None) -> int:
     refs = args.refs if args.refs is not None else (
         FAST_REFS if args.fast else DEFAULT_REFS)
 
+    if args.gc:
+        from .registry import LEGACY_SCHEMA, SUITE_SCHEMA
+
+        store = ResultStore(args.store)
+        # Markerless records predate the in-record marker and were all
+        # written at LEGACY_SCHEMA — the same default the runner's recall
+        # path uses, so gc never prunes a record that is still servable.
+        removed = store.prune(
+            lambda key, rec: rec.get("schema", LEGACY_SCHEMA) == SUITE_SCHEMA)
+        print(f"# gc: pruned {removed} stale record(s), "
+              f"{len(store)} kept in {store.root}", file=sys.stderr)
+        return 0
+
     registry = default_registry(refs=refs)
 
     if args.list:
@@ -89,7 +117,8 @@ def main(argv: list[str] | None = None) -> int:
 
     store = None if args.no_store else ResultStore(args.store)
     runner = SuiteRunner(registry, seed=args.seed, cores=args.cores,
-                         backend=args.backend, store=store)
+                         backend=args.backend, store=store,
+                         processes=args.processes)
     tables = [runner.roster(), runner.histogram()]
     emit_tables(tables, fmt=args.format, out=args.out)
 

@@ -25,11 +25,17 @@ from repro.capture import CAPTURED_KERNELS, captured_workloads
 from repro.core import tracegen
 from repro.core.tracegen import Workload
 
-__all__ = ["SuiteEntry", "SuiteRegistry", "default_registry", "SUITE_SCHEMA"]
+__all__ = ["SuiteEntry", "SuiteRegistry", "default_registry",
+           "SUITE_SCHEMA", "LEGACY_SCHEMA"]
 
 # Bumped whenever capture geometry or roster methodology changes in a way
 # that invalidates stored results.
 SUITE_SCHEMA = 1
+
+# Store records written before the in-record schema marker existed were all
+# produced at schema 1, so readers (and ``--gc``) treat a missing marker as
+# this value — legacy records stay recallable until the schema moves on.
+LEGACY_SCHEMA = 1
 
 _L1_WORDS = 32 * 1024 // 8
 _MiB_WORDS = 2**20 // 8
@@ -85,9 +91,19 @@ class SuiteEntry:
 
 @dataclass
 class SuiteRegistry:
-    """Ordered, name-unique collection of suite entries."""
+    """Ordered, name-unique collection of suite entries.
+
+    ``refs`` marks a registry that :func:`default_registry` can rebuild
+    from its synthetic trace length alone — the property
+    :meth:`~repro.suite.runner.SuiteRunner` needs to fan whole entries
+    across a *process* pool (workload generators close over ndarrays and
+    functions, so entries themselves cannot cross a pickle boundary; a
+    worker reconstructs the registry instead).  Hand-built registries
+    leave it ``None`` and characterize in-process.
+    """
 
     entries: list[SuiteEntry] = field(default_factory=list)
+    refs: int | None = None
 
     def register(self, workload: Workload, *, domain: str, source: str,
                  **params: object) -> SuiteEntry:
@@ -183,7 +199,7 @@ def default_registry(*, refs: int | None = None) -> SuiteRegistry:
     and do not shrink with ``refs``.
     """
     refs = tracegen.DEFAULT_REFS if refs is None else refs
-    reg = SuiteRegistry()
+    reg = SuiteRegistry(refs=refs)
     for w, params in _synthetic_grid(refs):
         reg.register(w, domain=_SYNTH_DOMAINS[w.family], source="synthetic",
                      **params)

@@ -2,16 +2,30 @@
 
 :class:`SuiteRunner` characterizes every registered entry with the
 standard Step-2/Step-3 pipeline — locality on the 1-core trace, then the
-host core sweep fanned over
-:meth:`repro.study.engine.SimEngine.sweep_parallel` (via
+host core sweep submitted as one
+:meth:`repro.study.engine.SimEngine.simulate_batch` (via
 ``classify.measure``) — and assigns the six-class verdict.  Each finished
 entry row is persisted to a content-addressed :class:`ResultStore`, so
 re-running a suite re-simulates only the missing cells; recalled rows are
 byte-identical to freshly computed ones (they store the rounded values).
+
+Entry-level process fan-out: with ``processes > 1`` the runner
+characterizes whole entries — not just core-sweep cells — across a
+:class:`~concurrent.futures.ProcessPoolExecutor`.  Workload generators
+close over ndarrays and nested functions, so entries cannot cross the
+pickle boundary; instead each worker rebuilds the
+:func:`~repro.suite.registry.default_registry` from the registry's
+``refs`` marker (cached per process) and characterizes entries by name.
+Rows computed in workers are identical to in-process rows (the pipeline
+is deterministic), and the parent persists them to the store exactly as
+in the sequential path.
 """
 
 from __future__ import annotations
 
+import functools
+import multiprocessing
+from concurrent.futures import ProcessPoolExecutor
 from dataclasses import dataclass
 
 from repro.core import cachesim, classify
@@ -20,7 +34,7 @@ from repro.study.engine import SimEngine
 from repro.study.result import StudyResult
 from repro.study.study import Study
 
-from .registry import SuiteEntry, SuiteRegistry
+from .registry import LEGACY_SCHEMA, SUITE_SCHEMA, SuiteEntry, SuiteRegistry
 from .store import ResultStore
 
 __all__ = ["SuiteRunner", "ROSTER_COLUMNS", "CLASSES"]
@@ -41,6 +55,25 @@ class RunStats:
         return {"computed": self.computed, "recalled": self.recalled}
 
 
+@functools.lru_cache(maxsize=1)
+def _worker_runner(refs: int, seed: int, cores: tuple[int, ...],
+                   backend: str) -> "SuiteRunner":
+    """Per-process runner over a rebuilt default registry (fork/spawn-safe:
+    constructed on first task, reused for every entry the worker gets)."""
+    from .registry import default_registry
+
+    return SuiteRunner(default_registry(refs=refs), seed=seed, cores=cores,
+                       backend=backend, store=None)
+
+
+def _characterize_entry(task: tuple) -> tuple:
+    """Process-pool task: one entry's roster row, by name."""
+    name, refs, seed, cores, backend = task
+    runner = _worker_runner(refs, seed, cores, backend)
+    entry = next(e for e in runner.registry if e.name == name)
+    return runner._characterize(entry)
+
+
 class SuiteRunner:
     """One registry x one memoized engine x one (optional) result store."""
 
@@ -52,6 +85,7 @@ class SuiteRunner:
         cores: tuple[int, ...] = CORE_SWEEP,
         backend: str | None = None,
         store: ResultStore | None = None,
+        processes: int | None = None,
     ) -> None:
         self.registry = registry
         self.seed = seed
@@ -61,12 +95,14 @@ class SuiteRunner:
         # implementation that actually runs (REPRO_SIM_BACKEND included).
         self.backend = backend if backend is not None else \
             cachesim.default_backend()
+        self.processes = processes
         self.study = Study(
             suite=registry.workloads(), seed=seed, cores=self.cores,
             engine=SimEngine(backend=self.backend),
         )
         self.stats = RunStats()
         self._rows: dict[str, tuple] = {}
+        self._rebuilt: dict[str, SuiteEntry] | None = None
 
     # ---- characterization ------------------------------------------------
     def _characterize(self, entry: SuiteEntry) -> tuple:
@@ -81,31 +117,132 @@ class SuiteRunner:
             round(m.mpki, 2), round(m.lfmr_mean, 3), round(m.lfmr_slope, 3),
         )
 
+    def _recall(self, entry: SuiteEntry) -> tuple | None:
+        """Store lookup for one entry; caches and counts on hit."""
+        if self.store is None:
+            return None
+        key = entry.fingerprint(seed=self.seed, cores=self.cores,
+                                backend=self.backend)
+        rec = self.store.get(key)
+        if (rec is not None
+                and rec.get("schema", LEGACY_SCHEMA) == SUITE_SCHEMA
+                and rec.get("columns") == list(ROSTER_COLUMNS)):
+            row = tuple(rec["row"])
+            self._rows[entry.name] = row
+            self.stats.recalled += 1
+            return row
+        return None
+
+    def _persist(self, entry: SuiteEntry, row: tuple) -> None:
+        self._rows[entry.name] = row
+        self.stats.computed += 1
+        if self.store is not None:
+            key = entry.fingerprint(seed=self.seed, cores=self.cores,
+                                    backend=self.backend)
+            self.store.put(key, {"schema": SUITE_SCHEMA,
+                                 "columns": list(ROSTER_COLUMNS),
+                                 "row": list(row)})
+
     def row(self, entry: SuiteEntry) -> tuple:
         """One roster row, store-first (computed and persisted on miss)."""
         got = self._rows.get(entry.name)
         if got is not None:
             return got
-        key = entry.fingerprint(seed=self.seed, cores=self.cores,
-                                backend=self.backend)
-        if self.store is not None:
-            rec = self.store.get(key)
-            if rec is not None and rec.get("columns") == list(ROSTER_COLUMNS):
-                row = tuple(rec["row"])
-                self._rows[entry.name] = row
-                self.stats.recalled += 1
-                return row
+        got = self._recall(entry)
+        if got is not None:
+            return got
         row = self._characterize(entry)
-        if self.store is not None:
-            self.store.put(key, {"columns": list(ROSTER_COLUMNS),
-                                 "row": list(row)})
-        self._rows[entry.name] = row
-        self.stats.computed += 1
+        self._persist(entry, row)
         return row
+
+    def compute_all(self, *, processes: int | None = None) -> None:
+        """Materialize every entry row, fanning misses across processes.
+
+        ``processes`` (default: the constructor's ``processes``) > 1 fans
+        whole entries over a :class:`ProcessPoolExecutor`; each worker
+        rebuilds the default registry from ``registry.refs`` (required —
+        a hand-built registry cannot cross the pickle boundary) and
+        returns finished rows, which the parent persists.  ``0`` means
+        one process per CPU.  Store-recalled entries never reach the
+        pool, and neither does any entry the rebuilt registry would not
+        reproduce *identically* (same entry fingerprint, same workload
+        generator) — a registry that was extended or had entries swapped
+        after ``default_registry`` keeps working, with the divergent
+        entries characterized in-process.
+        """
+        processes = self.processes if processes is None else processes
+        if processes == 0:
+            import os
+            processes = os.cpu_count() or 1
+        todo = [
+            e for e in self.registry
+            if e.name not in self._rows and self._recall(e) is None
+        ]
+        if not todo:
+            return
+        if processes is None or processes <= 1 or len(todo) == 1:
+            for entry in todo:
+                self._persist(entry, self._characterize(entry))
+            return
+        if self.registry.refs is None:
+            raise ValueError(
+                "process fan-out needs a registry reconstructible from "
+                "default_registry(refs=...); this registry has no refs "
+                "marker — run with processes=1"
+            )
+        remote, local = [], []
+        for entry in todo:
+            (remote if self._reconstructible(entry) else local).append(entry)
+        if remote:
+            tasks = [
+                (e.name, self.registry.refs, self.seed, self.cores,
+                 self.backend)
+                for e in remote
+            ]
+            # spawn, not fork: the parent may have JAX (or another
+            # multithreaded library) loaded, and forking a multithreaded
+            # process can deadlock a child on an inherited lock.  Workers
+            # rebuild everything from the pickled task tuple anyway.
+            ctx = multiprocessing.get_context("spawn")
+            with ProcessPoolExecutor(
+                    max_workers=min(processes, len(remote)),
+                    mp_context=ctx) as pool:
+                for entry, row in zip(remote,
+                                      pool.map(_characterize_entry, tasks)):
+                    self._persist(entry, tuple(row))
+        for entry in local:
+            self._persist(entry, self._characterize(entry))
+
+    def _reconstructible(self, entry: SuiteEntry) -> bool:
+        """Would a worker's rebuilt default registry reproduce ``entry``
+        exactly?  Checked on the entry fingerprint (params, domain,
+        expected class, seed/cores/backend) *and* the workload-generator
+        fingerprint (code object + closed-over parameters), so a swapped
+        generator under an unchanged name is caught, not silently
+        mischaracterized."""
+        from repro.study.engine import _fingerprint as workload_fingerprint
+
+        other = self._rebuilt_default().get(entry.name)
+        if other is None:
+            return False
+        kw = dict(seed=self.seed, cores=self.cores, backend=self.backend)
+        return (other.fingerprint(**kw) == entry.fingerprint(**kw)
+                and workload_fingerprint(other.workload)
+                == workload_fingerprint(entry.workload))
+
+    def _rebuilt_default(self) -> dict[str, SuiteEntry]:
+        if self._rebuilt is None:
+            from .registry import default_registry
+            self._rebuilt = {
+                e.name: e
+                for e in default_registry(refs=self.registry.refs)
+            }
+        return self._rebuilt
 
     # ---- tables ----------------------------------------------------------
     def roster(self) -> StudyResult:
         """The Table-3-style roster: one row per entry, both sources."""
+        self.compute_all()
         res = StudyResult("suite_roster", ROSTER_COLUMNS)
         for entry in self.registry:
             res.append(self.row(entry))

@@ -73,3 +73,29 @@ class ResultStore:
 
     def __contains__(self, key: str) -> bool:
         return self._path(key).exists()
+
+    def keys(self):
+        """All record keys currently on disk (sorted for determinism)."""
+        if not self.root.exists():
+            return
+        for path in sorted(self.root.glob("*/*.json")):
+            yield path.stem
+
+    def prune(self, keep) -> int:
+        """Delete every record for which ``keep(key, record)`` is falsy.
+
+        Corrupt (unreadable) records are always deleted.  Returns the
+        number of records removed.  Used by ``python -m repro.suite --gc``
+        to drop records from old schema versions, whose keys — derived
+        from the old schema number — can never be looked up again.
+        """
+        removed = 0
+        for key in list(self.keys()):
+            rec = self.get(key)
+            if rec is None or not keep(key, rec):
+                try:
+                    self._path(key).unlink()
+                    removed += 1
+                except FileNotFoundError:
+                    pass  # concurrent runner got there first
+        return removed

@@ -6,9 +6,13 @@ pipeline can produce, ``level_hits`` / ``level_misses`` /
 equal the reference per-line loop exactly — a fast-but-wrong simulator
 would silently corrupt every downstream classification.  The matrix here
 sweeps all 7 workload families x {host, host+pf, host+nuca, ndp} x
-``l3_factor`` in {1, 1/4, 1/16}.
+``l3_factor`` in {1, 1/4, 1/16}, through both the single-cell
+``simulate`` entry point and the batched single pass ``simulate_batch``
+(which shares level prefixes and caps same-set-count scans at the maximum
+requested associativity).
 """
 
+import threading
 import time
 
 import numpy as np
@@ -101,6 +105,90 @@ class TestDifferentialMatrix:
         assert vec.l1_misses == addr.size  # ways+1-cycle always misses
 
 
+class TestSimulateBatch:
+    """The batched single pass must be counter-identical to per-cell runs
+    across the full family x hierarchy x l3_factor matrix."""
+
+    @pytest.mark.parametrize("family", _FAMILY_PARAMS)
+    def test_full_matrix_batch_identity(self, family):
+        w = _FAMILY_WORKLOADS[family]
+        spec = w.trace(4)
+        kwargs = dict(
+            ai_ops_per_access=w.ai_ops_per_access,
+            instr_per_access=w.instr_per_access,
+        )
+        reqs = [(CONFIGS[name](), f)
+                for name in sorted(CONFIGS) for f in L3_FACTORS]
+        batch = cachesim.simulate_batch(
+            spec.addresses, [cfg for cfg, _ in reqs],
+            l3_factor=[f for _, f in reqs],
+            backend="vectorized", **kwargs)
+        ref_batch = cachesim.simulate_batch(
+            spec.addresses, [cfg for cfg, _ in reqs],
+            l3_factor=[f for _, f in reqs],
+            backend="reference", **kwargs)
+        assert len(batch) == len(reqs)
+        for (cfg, f), vec, ref in zip(reqs, batch, ref_batch):
+            assert vec == ref, (cfg.name, f)
+            single = cachesim.simulate(
+                spec.addresses, cfg, l3_factor=f,
+                backend="reference", **kwargs)
+            assert vec == single, (cfg.name, f)
+
+    def test_shared_sets_different_ways_thresholding(self):
+        """Two LLC geometries with the same set count but different
+        associativity must share one capped scan and still match the
+        reference per-config (LRU-inclusion thresholding)."""
+        l1 = cachesim.CacheLevelConfig(32 * 1024, 8)
+        a = cachesim.HierarchyConfig(
+            levels=(l1, cachesim.CacheLevelConfig(8 * 2**20, 16)), name="a")
+        b = cachesim.HierarchyConfig(
+            levels=(l1, cachesim.CacheLevelConfig(4 * 2**20, 8)), name="b")
+        c = cachesim.HierarchyConfig(
+            levels=(l1, cachesim.CacheLevelConfig(2 * 2**20, 4)), name="c")
+        assert a.levels[1].sets == b.levels[1].sets == c.levels[1].sets
+
+        w = _FAMILY_WORKLOADS["irregular"]
+        spec = w.trace(1)
+        batch = cachesim_vec.simulate_batch(spec.addresses, [a, b, c])
+        for cfg, vec in zip((a, b, c), batch):
+            ref = cachesim.simulate(spec.addresses, cfg, backend="reference")
+            assert vec == ref, cfg.name
+
+    def test_scalar_and_sequence_l3_factor(self):
+        w = _FAMILY_WORKLOADS["stream"]
+        spec = w.trace(1)
+        cfgs = [cachesim.host_config(1), cachesim.host_config(1)]
+        shared = cachesim_vec.simulate_batch(spec.addresses, cfgs,
+                                             l3_factor=0.25)
+        listed = cachesim_vec.simulate_batch(spec.addresses, cfgs,
+                                             l3_factor=[0.25, 0.25])
+        assert shared == listed
+        with pytest.raises(ValueError, match="l3_factor"):
+            cachesim_vec.simulate_batch(spec.addresses, cfgs,
+                                        l3_factor=[0.25])
+
+    def test_empty_batch_and_names(self):
+        w = _FAMILY_WORKLOADS["stream"]
+        spec = w.trace(1)
+        assert cachesim_vec.simulate_batch(spec.addresses, []) == []
+        out = cachesim_vec.simulate_batch(
+            spec.addresses, [cachesim.ndp_config(1)], names=["custom"])
+        assert out[0].name == "custom"
+
+    def test_reference_backend_batch_dispatch(self):
+        w = _FAMILY_WORKLOADS["chase"]
+        spec = w.trace(1)
+        cfgs = [cachesim.host_config(1), cachesim.ndp_config(1)]
+        ref = cachesim.simulate_batch(spec.addresses, cfgs,
+                                      backend="reference")
+        vec = cachesim.simulate_batch(spec.addresses, cfgs,
+                                      backend="vectorized")
+        assert ref == vec
+        with pytest.raises(ValueError, match="unknown backend"):
+            cachesim.simulate_batch(spec.addresses, cfgs, backend="zsim")
+
+
 class TestBackendSelection:
     def test_env_var_resolution(self, monkeypatch):
         monkeypatch.setenv("REPRO_SIM_BACKEND", "reference")
@@ -136,27 +224,49 @@ class TestBackendSelection:
         assert ref == vec
 
 
-class TestFirstLevelCache:
+class TestTraceMemo:
+    """The keyed profile/miss-stream memo that replaced the L1-filter
+    cache: identity-keyed, CRC-revalidated, LRU-bounded, thread-safe."""
+
     def test_identity_keyed_reuse_is_exact(self):
-        """The same trace array through host and NDP shares one L1 filter;
-        counters still match per-config reference runs."""
+        """The same trace array through host, NDP and pf hierarchies
+        shares level prefixes through the memo; counters still match
+        per-config reference runs."""
         w = _FAMILY_WORKLOADS["l1cap"]
         spec = w.trace(1)
         for cfg in (cachesim.host_config(1), cachesim.ndp_config(1),
-                    cachesim.host_config(1, prefetcher=True)):
+                    cachesim.host_config(1, prefetcher=True),
+                    cachesim.host_config(1, nuca_mb_per_core=2.0)):
             ref = cachesim.simulate(spec.addresses, cfg, backend="reference")
             vec = cachesim.simulate(spec.addresses, cfg, backend="vectorized")
             assert ref == vec, cfg.name
 
-    def test_cache_is_bounded(self):
-        for i in range(3 * cachesim_vec._L1_CACHE_MAX):
+    def test_memo_reuses_shared_prefixes(self):
+        """A second hierarchy over the same trace recomputes only the
+        levels its geometry prefix does not share."""
+        addr = np.arange(50_000, dtype=np.int64) % 9973
+        memo_count_before = len(cachesim_vec._MEMOS)
+        cachesim_vec.simulate(addr, cachesim.host_config(1))
+        memo = next(m for m in cachesim_vec._MEMOS if m.ref is addr)
+        levels_after_host = set(memo.levels)
+        cachesim_vec.simulate(addr, cachesim.ndp_config(1))
+        # NDP's single level is host's L1 prefix: nothing new computed
+        assert set(memo.levels) == levels_after_host
+        cachesim_vec.simulate(addr, cachesim.host_config(1),
+                              l3_factor=0.25)
+        # the scaled-LLC variant adds exactly one new level result
+        assert len(memo.levels) == len(levels_after_host) + 1
+        assert len(cachesim_vec._MEMOS) <= memo_count_before + 1
+
+    def test_memo_is_bounded(self):
+        for i in range(3 * cachesim_vec._MEMO_MAX):
             cachesim_vec.simulate(np.arange(64) + 512 * i,
                                   cachesim.host_config(1))
-        assert len(cachesim_vec._L1_CACHE) <= cachesim_vec._L1_CACHE_MAX
+        assert len(cachesim_vec._MEMOS) <= cachesim_vec._MEMO_MAX
 
     def test_in_place_mutation_recomputes(self):
         """Mutating an address array between calls must not serve stale
-        counters from the identity-keyed cache."""
+        counters from the identity-keyed memo (CRC revalidation)."""
         addr = np.arange(4096, dtype=np.int64)
         cfg = cachesim.host_config(1)
         first = cachesim_vec.simulate(addr, cfg)
@@ -176,6 +286,63 @@ class TestFirstLevelCache:
         second = cachesim_vec.simulate(addr, cfg)
         assert second.lines_touched == first.lines_touched + 1
         assert second == cachesim.simulate(addr, cfg, backend="reference")
+
+    def test_mutation_recomputes_on_batch_path(self):
+        """The CRC path guards simulate_batch exactly like simulate."""
+        addr = (np.arange(8192, dtype=np.int64) * 7) % 4096
+        cfgs = [cachesim.host_config(1), cachesim.ndp_config(1)]
+        cachesim_vec.simulate_batch(addr, cfgs)
+        addr[123] = 99_999_999
+        second = cachesim_vec.simulate_batch(addr, cfgs)
+        for cfg, vec in zip(cfgs, second):
+            assert vec == cachesim.simulate(addr, cfg, backend="reference")
+
+    def test_thread_safety_under_sweep_parallel(self):
+        """Concurrent engine sweeps over many traces (and concurrent
+        batches over the *same* trace) must neither corrupt counters nor
+        grow the memo past its bound."""
+        from repro.study import SimEngine
+
+        w = _FAMILY_WORKLOADS["blocked"]
+        expected = {
+            c: cachesim.simulate(
+                w.trace(c).addresses, cachesim.host_config(c),
+                ai_ops_per_access=w.ai_ops_per_access,
+                instr_per_access=w.instr_per_access,
+                l3_factor=w.trace(c).l3_factor, backend="reference")
+            for c in (1, 4, 16)
+        }
+
+        engine = SimEngine(backend="vectorized")
+        spec = w.trace(4)
+        same_trace_out: list = []
+
+        def hammer_same_trace():
+            out = cachesim_vec.simulate_batch(
+                spec.addresses,
+                [cachesim.host_config(4), cachesim.ndp_config(4)],
+                l3_factor=spec.l3_factor)
+            same_trace_out.append(out)
+
+        threads = [threading.Thread(target=hammer_same_trace)
+                   for _ in range(4)]
+        for t in threads:
+            t.start()
+        sims = engine.sweep_parallel(w, (1, 4, 16), cachesim.host_config,
+                                     max_workers=4)
+        for t in threads:
+            t.join()
+
+        for c, sim in zip((1, 4, 16), sims):
+            assert (sim.level_hits, sim.level_misses) == (
+                expected[c].level_hits, expected[c].level_misses)
+        ref_host4 = cachesim.simulate(spec.addresses, cachesim.host_config(4),
+                                      l3_factor=spec.l3_factor,
+                                      backend="reference")
+        for out in same_trace_out:
+            assert out[0].level_hits == ref_host4.level_hits
+            assert out[0].level_misses == ref_host4.level_misses
+        assert len(cachesim_vec._MEMOS) <= cachesim_vec._MEMO_MAX
 
 
 @pytest.mark.slow

@@ -81,6 +81,78 @@ def test_translation_invariance(base, stride):
     assert s0 == pytest.approx(s1)
 
 
+# --------------------------------------------------------------------------
+# Differential: the vectorized (reshape + row-wise scan) implementations
+# must be *bit-identical* to the definitional per-window loops — the suite
+# roster CSV's byte-identity depends on it.
+# --------------------------------------------------------------------------
+def _ref_spatial(addresses, window=locality.DEFAULT_WINDOW):
+    addr = np.asarray(addresses, dtype=np.int64)
+    n = addr.size
+    if n < 2:
+        return 0.0
+    window = max(2, int(window))
+    n_windows = n // window
+    chunks = ([addr] if n_windows == 0
+              else np.split(addr[: n_windows * window], n_windows))
+    strides = np.empty(len(chunks), dtype=np.int64)
+    for k, chunk in enumerate(chunks):
+        d = np.diff(np.sort(chunk))
+        d = d[d > 0]
+        strides[k] = int(d.min()) if d.size else 0
+    strides = strides[strides > 0]
+    if strides.size == 0:
+        return 0.0
+    uniq, counts = np.unique(strides, return_counts=True)
+    return float(np.sum(counts / float(len(chunks)) / uniq))
+
+
+def _ref_temporal(addresses, window=locality.DEFAULT_WINDOW):
+    addr = np.asarray(addresses, dtype=np.int64)
+    n = addr.size
+    if n == 0:
+        return 0.0
+    window = max(2, int(window))
+    n_windows = max(1, n // window)
+    chunks = (np.split(addr[: n_windows * window], n_windows)
+              if n >= window else [addr])
+    max_bins = int(np.ceil(np.log2(window))) + 2
+    reuse_profile = np.zeros(max_bins, dtype=np.int64)
+    for chunk in chunks:
+        _, counts = np.unique(chunk, return_counts=True)
+        repeats = counts - 1
+        repeats = repeats[repeats > 0]
+        if repeats.size:
+            bins = np.floor(np.log2(repeats)).astype(np.int64)
+            np.add.at(reuse_profile, bins, 1)
+    total = float(addr[: n_windows * window].size if n >= window else n)
+    weights = 2.0 ** np.arange(max_bins)
+    return float(np.minimum(np.sum(weights * reuse_profile) / total, 1.0))
+
+
+class TestVectorizedMatchesReferenceLoop:
+    @pytest.mark.parametrize("window", (8, 32, 128))
+    def test_family_traces(self, window):
+        from repro.core import tracegen
+
+        for w in tracegen.make_suite(refs=4_000):
+            addr = w.trace(1).addresses
+            assert locality.spatial_locality(addr, window) == \
+                _ref_spatial(addr, window), (w.name, window)
+            assert locality.temporal_locality(addr, window) == \
+                _ref_temporal(addr, window), (w.name, window)
+
+    @pytest.mark.parametrize("n", (0, 1, 2, 5, 31, 32, 33, 64, 1000))
+    def test_lengths_and_edge_windows(self, n):
+        rng = np.random.default_rng(n)
+        addr = rng.integers(0, 50, size=n)
+        for window in (2, 8, 32):
+            assert locality.spatial_locality(addr, window) == \
+                _ref_spatial(addr, window)
+            assert locality.temporal_locality(addr, window) == \
+                _ref_temporal(addr, window)
+
+
 def test_window_sweep_stable():
     """Paper §2.3: conclusions stable across W, L in {8..128}."""
     rng = np.random.default_rng(1)

@@ -152,6 +152,65 @@ class TestSweepParallel:
         assert par == SimEngine().sweep(w, self.CORES, cachesim.ndp_config)
 
 
+class TestSimulateBatch:
+    """Engine-level batching: many (cores, hierarchy) cells in one call,
+    grouped by trace and run through the backend's single pass."""
+
+    def cells(self):
+        return [
+            (c, cfg)
+            for c in (1, 4)
+            for cfg in (cachesim.host_config(c),
+                        cachesim.host_config(c, prefetcher=True),
+                        cachesim.ndp_config(c))
+        ]
+
+    def test_results_equal_per_cell_simulate(self, suite):
+        w = suite[1]
+        batch = SimEngine().simulate_batch(w, self.cells())
+        single_engine = SimEngine()
+        singles = [single_engine.simulate(w, c, cfg)
+                   for c, cfg in self.cells()]
+        assert batch == singles
+
+    def test_batch_matches_reference_backend(self, suite):
+        w = suite[1]
+        vec = SimEngine(backend="vectorized").simulate_batch(w, self.cells())
+        ref = SimEngine(backend="reference").simulate_batch(w, self.cells())
+        assert vec == ref
+
+    def test_stats_and_memoization(self, suite):
+        w = suite[0]
+        engine = SimEngine()
+        cells = self.cells()
+        engine.simulate_batch(w, cells)
+        assert engine.stats.sim_runs == len(cells)
+        assert engine.stats.sim_hits == 0
+        assert engine.stats.trace_runs == 2  # cores 1 and 4
+        # second submission: all recalled
+        engine.simulate_batch(w, cells)
+        assert engine.stats.sim_runs == len(cells)
+        assert engine.stats.sim_hits == len(cells)
+        # duplicates inside one batch collapse to one run
+        fresh = SimEngine()
+        dup = [(4, cachesim.host_config(4))] * 3
+        sims = fresh.simulate_batch(w, dup)
+        assert sims[0] is sims[1] is sims[2]
+        assert fresh.stats.sim_runs == 1 and fresh.stats.sim_hits == 2
+
+    def test_partial_overlap_with_prior_sweeps(self, suite):
+        """Cells already memoized by a sweep are recalled, only the truly
+        missing hierarchies run."""
+        w = suite[0]
+        engine = SimEngine()
+        engine.sweep(w, (1, 4), cachesim.host_config)
+        runs_before = engine.stats.sim_runs
+        engine.simulate_batch(w, self.cells())
+        # 6 cells, 2 already present -> 4 new runs
+        assert engine.stats.sim_runs == runs_before + 4
+        assert engine.stats.sim_hits == 2
+
+
 # --------------------------------------------------------------------------
 # Study queries vs the standalone free functions (seed behaviour)
 # --------------------------------------------------------------------------
@@ -200,18 +259,26 @@ class TestStudyMatchesFreeFunctions:
                 assert rows[3 * i + j] == expect
 
     def test_each_cell_simulated_at_most_once(self, suite, monkeypatch):
-        """Acceptance: across the whole figure set, cachesim.simulate runs
-        at most once per (workload, cores, config) cell."""
+        """Acceptance: across the whole figure set, each (workload, cores,
+        config) cell passes through the cachesim backend at most once —
+        whether it is submitted singly or inside a batch."""
         from benchmarks import paper_figures
 
         calls = []
         real = cachesim.simulate
+        real_batch = cachesim.simulate_batch
 
         def counting(addresses, config, **kw):
             calls.append(config)
             return real(addresses, config, **kw)
 
+        def counting_batch(addresses, configs, **kw):
+            configs = list(configs)
+            calls.extend(configs)
+            return real_batch(addresses, configs, **kw)
+
         monkeypatch.setattr(cachesim, "simulate", counting)
+        monkeypatch.setattr(cachesim, "simulate_batch", counting_batch)
         small = suite[:4]
         study = Study(suite=small)
         paper_figures.fig1_roofline_mpki(study)

@@ -117,6 +117,52 @@ class TestResultStore:
         monkeypatch.setenv("REPRO_SUITE_STORE", str(tmp_path / "s"))
         assert ResultStore().root == tmp_path / "s"
 
+    def test_keys_iteration(self, tmp_path):
+        store = ResultStore(tmp_path)
+        keys = [f"{i:02x}" + "0" * 62 for i in range(5)]
+        for k in keys:
+            store.put(k, {"schema": 1})
+        assert list(store.keys()) == sorted(keys)
+        assert list(ResultStore(tmp_path / "missing").keys()) == []
+
+    def test_prune_by_schema(self, tmp_path):
+        from repro.suite.registry import LEGACY_SCHEMA, SUITE_SCHEMA
+
+        store = ResultStore(tmp_path)
+        current = "aa" + "0" * 62
+        legacy = "bb" + "0" * 62      # PR-3-era record: no schema marker
+        stale = "cc" + "0" * 62       # explicit old schema
+        corrupt = "dd" + "0" * 62
+        store.put(current, {"schema": SUITE_SCHEMA, "row": [1]})
+        store.put(legacy, {"columns": ["a"], "row": [2]})
+        store.put(stale, {"schema": SUITE_SCHEMA - 1, "row": [3]})
+        store.put(corrupt, {"x": 1})
+        (tmp_path / "dd" / f"{corrupt}.json").write_text("{trunc")
+
+        removed = store.prune(
+            lambda key, rec: rec.get("schema", LEGACY_SCHEMA) == SUITE_SCHEMA)
+        assert removed == 2
+        assert current in store
+        # markerless records read as LEGACY_SCHEMA — still servable by the
+        # runner's recall path (same default), so gc must keep them
+        assert legacy in store
+        assert stale not in store
+        assert corrupt not in store
+        assert len(store) == 2
+
+    def test_gc_cli(self, tmp_path, capsys):
+        from repro.suite.__main__ import main
+        from repro.suite.registry import SUITE_SCHEMA
+
+        store = ResultStore(tmp_path)
+        store.put("aa" + "0" * 62, {"schema": SUITE_SCHEMA, "row": [1]})
+        store.put("bb" + "0" * 62, {"row": [2]})  # legacy marker: kept
+        store.put("cc" + "0" * 62, {"schema": SUITE_SCHEMA + 1, "row": [3]})
+        assert main(["--gc", "--store", str(tmp_path)]) == 0
+        err = capsys.readouterr().err
+        assert "pruned 1" in err and "2 kept" in err
+        assert len(store) == 2
+
 
 # --------------------------------------------------------------------------
 # Runner
@@ -183,6 +229,93 @@ class TestRunner:
         assert rec["assigned"] == "1a" == rec["expected"]
         assert rec["match"] == 1
         assert runner.divergent(source="captured") == []
+
+    def test_record_carries_schema_marker(self, tmp_path):
+        from repro.suite.registry import SUITE_SCHEMA
+
+        store = ResultStore(tmp_path)
+        runner = SuiteRunner(_tiny_registry(), cores=CORES, store=store)
+        runner.roster()
+        keys = list(store.keys())
+        assert len(keys) == 3
+        for key in keys:
+            assert store.get(key)["schema"] == SUITE_SCHEMA
+
+
+class TestProcessFanOut:
+    """Entry-level process-pool characterization (whole entries, not just
+    core-sweep cells) must reproduce the sequential roster exactly."""
+
+    @staticmethod
+    def _trimmed_registry():
+        """A cheap both-source subset that stays worker-reconstructible
+        (the refs marker survives; workers rebuild the full default
+        registry and characterize these entries by name)."""
+        reg = default_registry(refs=REFS)
+        keep = {"syn.stream.copy", "syn.chase.64MiB.e8",
+                "pal.stream.copy.1MiB"}
+        reg.entries = [e for e in reg.entries if e.name in keep]
+        assert len(reg.entries) == 3
+        return reg
+
+    def test_processes_match_sequential(self, tmp_path):
+        reg = self._trimmed_registry()
+        seq = SuiteRunner(self._trimmed_registry(), cores=CORES)
+
+        store = ResultStore(tmp_path)
+        par = SuiteRunner(reg, cores=CORES, store=store, processes=2)
+        # every entry must be eligible for the worker pool (a silent
+        # in-process fallback would hide a reconstructibility regression)
+        assert all(par._reconstructible(e) for e in reg)
+        roster = par.roster()
+        assert par.stats.computed == 3 and par.stats.recalled == 0
+        assert roster.to_csv() == seq.roster().to_csv()
+        # worker rows were persisted by the parent: a rerun recalls all
+        rerun = SuiteRunner(reg, cores=CORES, store=store, processes=2)
+        assert rerun.roster().to_csv() == roster.to_csv()
+        assert rerun.stats.recalled == 3 and rerun.stats.computed == 0
+
+    def test_modified_entries_fall_back_to_in_process(self, tmp_path):
+        """Entries a worker's rebuilt registry would not reproduce —
+        added names, or a swapped generator under an unchanged name —
+        must be characterized in-process, never mischaracterized by the
+        pool."""
+        reg = self._trimmed_registry()
+        # swap one entry's workload generator while keeping its name/params
+        victim = reg.entries[0]
+        donor = tracegen.make_suite(refs=REFS)[3]
+        impostor = tracegen.Workload(
+            name=victim.name, family=victim.workload.family,
+            expected_class=victim.expected_class,
+            ai_ops_per_access=victim.workload.ai_ops_per_access,
+            instr_per_access=victim.workload.instr_per_access,
+            gen=donor.gen)
+        reg.entries[0] = SuiteRegistry().register(
+            impostor, domain=victim.domain, source=victim.source,
+            **dict(victim.params))
+        runner = SuiteRunner(reg, cores=CORES, processes=2)
+        assert not runner._reconstructible(reg.entries[0])
+        assert runner._reconstructible(reg.entries[1])
+        rows = runner.roster()
+        # the swapped entry's row reflects the *impostor* generator
+        solo = SuiteRunner(reg, cores=CORES)  # fully in-process
+        assert rows.to_csv() == solo.roster().to_csv()
+
+    def test_hand_built_registry_rejected(self):
+        reg = SuiteRegistry()
+        for w in tracegen.make_suite(refs=REFS)[:2]:
+            reg.register(w, domain="x", source="synthetic")
+        assert reg.refs is None
+        runner = SuiteRunner(reg, cores=CORES, processes=2)
+        with pytest.raises(ValueError, match="refs"):
+            runner.compute_all()
+
+    def test_single_process_value_is_sequential(self):
+        reg = SuiteRegistry()
+        for w in tracegen.make_suite(refs=REFS)[:2]:
+            reg.register(w, domain="x", source="synthetic")
+        runner = SuiteRunner(reg, cores=CORES, processes=1)
+        assert len(runner.roster()) == 2  # no pickle requirement at 1
 
 
 # --------------------------------------------------------------------------
