@@ -1,0 +1,150 @@
+"""CI perf-regression gate over the ``benchmarks.run`` section record.
+
+``benchmarks.run`` writes a machine-readable perf record (per-section
+wall-clock, bucketed per configuration) to ``BENCH_PR4.json``; the
+repository commits one as the performance baseline.  ``timing_smoke``
+gates only single-cell simulation latency, so a regression in the *batch*
+paths (engine batching, suite runner, figure queries) used to be
+invisible to CI.  This gate closes that hole::
+
+    python -m benchmarks.run --fast --bench-json bench-ci.json
+    python -m benchmarks.perf_gate --current bench-ci.json
+
+compares every section's wall-clock in the fresh record against the
+committed baseline under the same configuration bucket and exits non-zero
+when any section regressed by more than ``--max-ratio`` (default 2.0 —
+wide enough to absorb runner variance, tight enough to catch an
+accidentally-serialized batch path).  Sections faster than
+``--min-seconds`` in the baseline are compared against that floor instead
+(timer noise on a 0.0 s section is not a regression signal); sections
+present on only one side are reported but never fail the gate (new or
+renamed sections should not need a baseline edit in the same commit).
+
+The committed baseline encodes the wall-clock of the machine that
+recorded it; to keep the gate meaningful on a runner of different speed,
+``benchmarks.run`` also records a fixed NumPy calibration workload's
+wall-clock (``meta.calibration_seconds``) and the gate scales the
+baseline by the measured speed ratio when both records carry it (capped
+to [1/4, 4] so a corrupt calibration cannot neuter the gate).  Sections
+that time *real kernel* wall-clock (``kernels_stream`` /
+``kernels_attention`` measure achieved GB/s of jitted Pallas kernels)
+are jit-noise-bound rather than simulator-bound — CI skips them via
+``--skip``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+DEFAULT_BASELINE = "BENCH_PR4.json"
+DEFAULT_CONFIG = "fast-refs20000-vectorized"
+
+
+def load_sections(path: str, config: str) -> dict[str, float]:
+    return _load_bucket(path, config)[0]
+
+
+def _load_bucket(path: str, config: str) -> tuple[dict[str, float], float]:
+    """(per-section seconds, meta calibration seconds or 0.0)."""
+    with open(path) as f:
+        record = json.load(f)
+    bucket = record.get("runs", {}).get(config)
+    if bucket is None:
+        raise SystemExit(
+            f"{path}: no '{config}' bucket under 'runs' "
+            f"(have: {sorted(record.get('runs', {}))})")
+    sections = {name: float(entry["seconds"])
+                for name, entry in bucket.get("sections", {}).items()}
+    cal = float(bucket.get("meta", {}).get("calibration_seconds", 0.0))
+    return sections, cal
+
+
+def speed_factor(base_cal: float, cur_cal: float) -> float:
+    """Baseline scaling for machine-speed difference, capped to [1/4, 4].
+
+    > 1 means the current machine is slower than the recording machine,
+    so baseline seconds are inflated before comparison.  0/absent
+    calibration on either side disables normalization (factor 1.0).
+    """
+    if base_cal <= 0.0 or cur_cal <= 0.0:
+        return 1.0
+    return min(4.0, max(0.25, cur_cal / base_cal))
+
+
+def gate(baseline: dict[str, float], current: dict[str, float], *,
+         max_ratio: float, min_seconds: float, factor: float = 1.0,
+         out=sys.stdout) -> list[str]:
+    """Compare per-section wall-clock; return the failing section names.
+
+    ``factor`` scales the baseline for machine-speed difference (see
+    :func:`speed_factor`) before the ratio test.
+    """
+    failures: list[str] = []
+    if factor != 1.0:
+        print(f"machine-speed normalization: baseline x {factor:.2f}",
+              file=out)
+    print(f"{'section':18s} {'base_s':>8s} {'now_s':>8s} {'ratio':>7s}",
+          file=out)
+    for name in sorted(set(baseline) | set(current)):
+        if name not in current:
+            print(f"{name:18s} {baseline[name]:8.2f} {'-':>8s} {'-':>7s}  "
+                  f"(absent from current run)", file=out)
+            continue
+        if name not in baseline:
+            print(f"{name:18s} {'-':>8s} {current[name]:8.2f} {'-':>7s}  "
+                  f"(no baseline; informational)", file=out)
+            continue
+        floor = max(baseline[name] * factor, min_seconds)
+        ratio = current[name] / floor
+        verdict = ""
+        if current[name] > max_ratio * floor:
+            failures.append(name)
+            verdict = f"  REGRESSION (> {max_ratio:g}x)"
+        print(f"{name:18s} {baseline[name]:8.2f} {current[name]:8.2f} "
+              f"{ratio:7.2f}{verdict}", file=out)
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.perf_gate",
+        description="fail CI when a benchmarks.run section's wall-clock "
+                    "regresses vs the committed perf record")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help=f"committed perf record (default {DEFAULT_BASELINE})")
+    ap.add_argument("--current", required=True,
+                    help="perf record written by the CI benchmarks.run")
+    ap.add_argument("--config", default=DEFAULT_CONFIG,
+                    help=f"runs bucket to compare (default {DEFAULT_CONFIG})")
+    ap.add_argument("--max-ratio", type=float, default=2.0,
+                    help="fail when current > max-ratio * baseline "
+                         "(default 2.0)")
+    ap.add_argument("--min-seconds", type=float, default=0.75,
+                    help="baseline floor; faster baseline sections are "
+                         "compared against this instead (default 0.75)")
+    ap.add_argument("--skip", default="", metavar="S[,S]",
+                    help="comma list of sections to exclude (e.g. the "
+                         "machine-bound kernel wall-clock sections)")
+    args = ap.parse_args(argv)
+
+    skip = {s.strip() for s in args.skip.split(",") if s.strip()}
+    base_sections, base_cal = _load_bucket(args.baseline, args.config)
+    cur_sections, cur_cal = _load_bucket(args.current, args.config)
+    baseline = {k: v for k, v in base_sections.items() if k not in skip}
+    current = {k: v for k, v in cur_sections.items() if k not in skip}
+    failures = gate(baseline, current, max_ratio=args.max_ratio,
+                    min_seconds=args.min_seconds,
+                    factor=speed_factor(base_cal, cur_cal))
+    if failures:
+        print(f"perf gate FAILED: {', '.join(failures)} regressed "
+              f"beyond {args.max_ratio:g}x", file=sys.stderr)
+        return 1
+    print(f"perf gate OK: {len(current)} section(s) within "
+          f"{args.max_ratio:g}x of baseline", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

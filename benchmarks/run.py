@@ -92,6 +92,22 @@ def write_bench_json(path: str, config_key: str, payload: dict,
         f.write("\n")
 
 
+def calibration_seconds() -> float:
+    """Wall-clock of a fixed NumPy workload, recorded into the perf
+    record's meta so ``benchmarks.perf_gate`` can normalize section
+    timings across machines of different speed (the committed baseline
+    encodes the recording machine's clock)."""
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal(2**21)
+    t0 = time.time()
+    for _ in range(3):
+        np.sort(a)
+        np.argsort(a[: 2**19])
+    return time.time() - t0
+
+
 def main() -> None:
     from repro.core.cachesim import BACKENDS, default_backend
     from repro.core.tracegen import DEFAULT_REFS
@@ -178,6 +194,7 @@ def main() -> None:
                 "backend": backend,
                 "batch": "simulate_batch",  # single-pass engine batching
                 "cpus": os.cpu_count(),
+                "calibration_seconds": round(calibration_seconds(), 4),
             },
             "sections": timings,
         }

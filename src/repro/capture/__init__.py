@@ -1,13 +1,23 @@
 """``repro.capture`` — memory-trace capture from the repo's Pallas kernels.
 
-Turns each kernel's launch geometry (grid + BlockSpecs, mirrored by the
-``repro.kernels.*.capture`` hooks) into the per-grid-step HBM word-address
-stream the DAMOV pipeline consumes, so the repo's real kernels are
-characterization *subjects*, not bystanders.  Deterministic; requires
-neither a TPU nor jax.
+Turns each kernel's launch geometry (grid + BlockSpecs) into the
+per-grid-step HBM word-address stream the DAMOV pipeline consumes, so the
+repo's real kernels are characterization *subjects*, not bystanders.  The
+geometry is read straight off the kernel's traced ``pallas_call`` jaxpr
+when jax is importable (:func:`from_jaxpr` — zero mirroring; see
+``docs/adding-a-kernel.md``) and from per-kernel mirrored fallbacks
+otherwise, so the walk itself stays deterministic and requires neither a
+TPU nor jax.
 """
 
-from .grid import CaptureResult, GridCapture, OperandSpec, walk  # noqa: F401
+from .grid import (  # noqa: F401
+    CaptureResult,
+    GridCapture,
+    OperandSpec,
+    from_jaxpr,
+    walk,
+)
+from .jaxpr import capture_path  # noqa: F401
 from .kernels import (  # noqa: F401
     CAPTURED_KERNELS,
     CapturedKernel,
@@ -19,6 +29,8 @@ __all__ = [
     "GridCapture",
     "CaptureResult",
     "walk",
+    "from_jaxpr",
+    "capture_path",
     "CapturedKernel",
     "CAPTURED_KERNELS",
     "captured_workloads",

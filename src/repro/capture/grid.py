@@ -17,10 +17,22 @@ jax, and produces the same word-address traces
 :mod:`repro.core.cachesim` consumes for the synthetic suite, so captured
 kernels and synthetic workloads are characterized by one methodology.
 
-Each kernel package owns a ``capture.py`` hook that mirrors its
-``pallas_call`` geometry as a :class:`GridCapture` (see
-``repro.kernels.*.capture``); ``tests/test_capture.py`` cross-checks the
-mirrored constants against the jitted kernels when jax is importable.
+Two capture paths feed the walker, and they are **stream-identical by
+contract**:
+
+- :func:`from_jaxpr` (the default whenever jax is importable) traces the
+  kernel's ``pallas_call`` and reads the geometry straight out of the
+  jaxpr — zero mirroring; see :mod:`repro.capture.jaxpr`;
+- the per-kernel ``capture.py`` hooks keep a mirrored-geometry fallback so
+  a jax-free interpreter can still build the full suite registry.
+
+Counter-identity invariant: for every captured entry, the two paths emit
+**byte-identical** word-address streams and equal load/store/flop counters
+(``tests/test_capture_jaxpr.py`` diffs them over the whole legacy roster),
+so suite-store fingerprints, AI columns and class verdicts never depend on
+which path produced a trace.  The walker itself upholds the counter
+contract ``refs == loads + stores == addresses.size`` on full walks, and a
+``count_only`` walk returns the same counters with an empty address array.
 """
 
 from __future__ import annotations
@@ -35,6 +47,7 @@ __all__ = [
     "GridCapture",
     "CaptureResult",
     "walk",
+    "from_jaxpr",
     "WORDS_PER_FP32_PAIR",
 ]
 
@@ -150,6 +163,20 @@ def _tile_words(op: OperandSpec, block_idx: tuple[int, ...],
     if op.elems_per_word > 1:
         words = words[:: op.elems_per_word]
     return base_word + words
+
+
+def from_jaxpr(fn, args, *, scalar_values=(), flops: float = 0.0,
+               name: str | None = None) -> GridCapture:
+    """Capture a kernel's launch geometry by tracing its ``pallas_call``.
+
+    Thin entry point for :func:`repro.capture.jaxpr.from_jaxpr` (imported
+    lazily so this module stays importable without jax); see that module
+    for the walk-the-eqn-params contract.
+    """
+    from .jaxpr import from_jaxpr as _from_jaxpr
+
+    return _from_jaxpr(fn, args, scalar_values=scalar_values, flops=flops,
+                       name=name)
 
 
 def walk(cap: GridCapture, *, count_only: bool = False) -> CaptureResult:

@@ -1,0 +1,298 @@
+"""Zero-mirroring capture: trace a ``pallas_call`` and walk its jaxpr.
+
+The original capture path asked every kernel package to *mirror* its
+``pallas_call`` geometry — grid, block shapes, index maps — as plain data
+in a ``capture.py`` hook, and a consistency test to keep the mirror honest.
+That works, but it makes adding a captured kernel a two-artifact job and
+leaves a window where kernel and mirror drift.
+
+:func:`from_jaxpr` removes the mirroring step: it traces the kernel with
+``jax.make_jaxpr`` (abstract tracing only — no TPU, no compilation), finds
+the single ``pallas_call`` equation, and reads the launch geometry straight
+out of the equation's ``GridMapping`` params:
+
+- the grid;
+- one ``BlockMapping`` per block-mapped operand (inputs then outputs),
+  giving the block shape and the index-map jaxpr;
+- scalar-prefetch operands (``num_index_operands``), which have no block
+  mapping — the Pallas pipeline copies them to SMEM once before the grid
+  runs, so they become whole-array operands with a constant index map,
+  exactly how the mirrored hooks modeled them.
+
+Index-map jaxprs may read scalar-prefetch refs (``idx_ref[i]``); those ref
+ops are discharged (:func:`jax._src.state.discharge.discharge_state`) and
+the resulting pure jaxpr is evaluated for **every grid step in one vmap**,
+yielding an index table.  The returned :class:`~repro.capture.grid
+.GridCapture` therefore needs jax only at *capture* time; the walk itself
+(:func:`repro.capture.grid.walk`) stays pure NumPy, and the emitted DMA
+word stream is byte-identical to the mirrored hooks' streams
+(``tests/test_capture_jaxpr.py`` proves this differentially for every
+legacy captured entry).
+
+Path selection: the per-kernel hooks accept ``path="auto"|"jaxpr"|
+"mirror"``; ``auto`` (overridable via ``$REPRO_CAPTURE_PATH``) resolves to
+``jaxpr`` whenever jax is importable and falls back to the retained
+mirrored geometry otherwise, so a jax-free interpreter can still build the
+full suite registry.  Captures are memoized per launch geometry
+(:func:`memoized`) because suite builds and core sweeps re-request the
+same geometry many times.
+"""
+
+from __future__ import annotations
+
+import os
+from collections import OrderedDict
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .grid import GridCapture, OperandSpec
+
+__all__ = ["from_jaxpr", "capture_path", "memoized",
+           "elems_per_word", "PATHS"]
+
+PATHS = ("auto", "jaxpr", "mirror")
+
+
+def _jax_importable() -> bool:
+    try:
+        import jax  # noqa: F401
+    except Exception:
+        return False
+    return True
+
+
+def capture_path(path: str = "auto") -> str:
+    """Resolve a capture-path request to ``"jaxpr"`` or ``"mirror"``.
+
+    ``auto`` honours ``$REPRO_CAPTURE_PATH`` (if set to a non-``auto``
+    value) and otherwise picks ``jaxpr`` exactly when jax is importable.
+    An explicit ``jaxpr``/``mirror`` argument always wins — the
+    differential tests rely on forcing each side.
+    """
+    if path not in PATHS:
+        raise ValueError(f"capture path must be one of {PATHS}, got {path!r}")
+    if path == "auto":
+        env = os.environ.get("REPRO_CAPTURE_PATH", "auto")
+        if env not in PATHS:
+            raise ValueError(
+                f"$REPRO_CAPTURE_PATH must be one of {PATHS}, got {env!r}")
+        path = env
+    if path != "auto":
+        return path
+    return "jaxpr" if _jax_importable() else "mirror"
+
+
+# --------------------------------------------------------------------------
+# Capture memo.  Suite builds walk every captured entry once per (geometry,
+# cores) and the engine's core sweep re-requests geometries; tracing a
+# kernel costs ~50 ms, so hooks memoize on their full geometry key (which
+# includes scalar-prefetch value bytes where indices steer the DMA).
+# --------------------------------------------------------------------------
+_MEMO: OrderedDict[tuple, GridCapture] = OrderedDict()
+_MEMO_CAP = 256
+
+
+def memoized(key: tuple, build: Callable[[], GridCapture]) -> GridCapture:
+    """LRU-memoize one capture per geometry key."""
+    got = _MEMO.get(key)
+    if got is not None:
+        _MEMO.move_to_end(key)
+        return got
+    cap = build()
+    _MEMO[key] = cap
+    while len(_MEMO) > _MEMO_CAP:
+        _MEMO.popitem(last=False)
+    return cap
+
+
+def clear_memo() -> None:
+    _MEMO.clear()
+
+
+# --------------------------------------------------------------------------
+# The jaxpr walker.
+# --------------------------------------------------------------------------
+def _find_pallas_eqns(jaxpr, out: list) -> list:
+    """Collect ``pallas_call`` eqns, recursing into nested jaxprs (pjit,
+    closed_call, custom_* wrappers)."""
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            out.append(eqn)
+        for v in eqn.params.values():
+            inner = getattr(v, "jaxpr", None)
+            if inner is not None:
+                _find_pallas_eqns(inner, out)
+    return out
+
+
+def elems_per_word(dtype, *dims: int) -> int:
+    """Elements per 8-byte DAMOV trace word for one operand.
+
+    Word collapse requires every row start to be word-aligned, so the
+    packing factor is reduced (via gcd) to divide the operand's last-dim
+    extents — e.g. a ``(1,)`` fp32 broadcast scalar packs 1 elem/word, not
+    2, exactly as the mirrored hooks model it (same single word address
+    either way).
+    """
+    epw = max(1, 8 // np.dtype(dtype).itemsize)
+    import math
+    for d in dims:
+        epw = math.gcd(epw, int(d)) if d else epw
+    return max(1, epw)
+
+
+def _tabulate_index_map(index_map_jaxpr, grid: tuple[int, ...],
+                        scalar_values: tuple) -> np.ndarray:
+    """Evaluate one block's index map for every grid step.
+
+    Returns an int64 table of shape ``(n_steps, block_rank)`` in row-major
+    grid-step order (last grid axis fastest — the Pallas iteration order
+    the walker replays).  Ref reads of scalar-prefetch operands are
+    discharged to pure ops first; the discharged jaxpr appends the ref
+    values as extra outputs, which are dropped.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax import core
+    from jax._src.state.discharge import discharge_state
+
+    dj, dconsts = discharge_state(index_map_jaxpr.jaxpr,
+                                  index_map_jaxpr.consts)
+    scalars = tuple(jnp.asarray(v) for v in scalar_values)
+    n_steps = 1
+    for g in grid:
+        n_steps *= int(g)
+    # discharge appends the (unchanged) ref values as extra outputs; the
+    # block indices are the leading outputs
+    n_block_dims = len(dj.outvars) - len(scalars)
+
+    def point(*gidx):
+        outs = core.eval_jaxpr(dj, dconsts, *gidx, *scalars)
+        return tuple(jnp.asarray(o) for o in outs[:n_block_dims])
+
+    if n_steps == 0:
+        return np.zeros((0, n_block_dims), dtype=np.int64)
+    if not grid:
+        # gridless pallas_call: one implicit step, index maps take no args
+        row = point()
+        return np.asarray([[int(x) for x in row]], dtype=np.int64) \
+            if n_block_dims else np.zeros((1, 0), dtype=np.int64)
+    steps = np.stack(
+        [a.ravel() for a in np.indices(grid)], axis=0
+    ).astype(np.int32)
+    try:
+        cols = jax.vmap(point)(*[jnp.asarray(steps[a])
+                                 for a in range(len(grid))])
+    except Exception:
+        # vmap can reject exotic index maps; fall back to the plain loop.
+        rows = [point(*(jnp.int32(x) for x in steps[:, s]))
+                for s in range(n_steps)]
+        cols = [jnp.stack([r[d] for r in rows])
+                for d in range(n_block_dims)]
+    return np.stack(
+        [np.asarray(c, dtype=np.int64) for c in cols], axis=1
+    )
+
+
+def _table_index_map(table: np.ndarray,
+                     grid: tuple[int, ...]) -> Callable[..., tuple]:
+    """Turn a per-step index table into the walker's index_map callable."""
+    strides = [1] * len(grid)
+    for i in range(len(grid) - 2, -1, -1):
+        strides[i] = strides[i + 1] * grid[i + 1]
+
+    def index_map(*step: int) -> tuple[int, ...]:
+        lin = 0
+        for s, st in zip(step, strides):
+            lin += int(s) * st
+        return tuple(int(x) for x in table[lin])
+
+    return index_map
+
+
+def _prefetch_spec(name: str, sds) -> OperandSpec:
+    """Scalar-prefetch operand: copied to SMEM once before the grid runs —
+    a whole-array input with a constant index map (the walker emits its
+    words a single time, at grid start)."""
+    shape = tuple(int(d) for d in sds.shape)
+    rank = len(shape)
+    return OperandSpec(
+        name=name, role="in", shape=shape, block_shape=shape,
+        index_map=lambda *step, _r=rank: (0,) * _r,
+        elems_per_word=elems_per_word(sds.dtype, shape[-1]),
+    )
+
+
+def from_jaxpr(fn, args: Sequence, *, scalar_values: Sequence = (),
+               flops: float = 0.0, name: str | None = None) -> GridCapture:
+    """Capture one kernel launch's geometry by tracing its jaxpr.
+
+    ``fn`` is traced with ``jax.make_jaxpr`` over ``args`` (concrete arrays
+    or ``jax.ShapeDtypeStruct`` placeholders — only shapes/dtypes matter to
+    the trace) and must contain exactly one ``pallas_call``.
+    ``scalar_values`` supplies the **concrete** values of the call's
+    scalar-prefetch operands in order (``num_index_operands`` of them);
+    they are needed to evaluate data-dependent index maps (gather /
+    paged-KV / MoE dispatch) and must equal the values the real launch
+    would receive.  ``flops`` is the arithmetic-op count of the whole
+    launch (the jaxpr could estimate it, but hooks pass their exact model
+    so AI stays identical to the mirrored path).
+    """
+    import jax
+
+    closed = jax.make_jaxpr(fn)(*args)
+    eqns = _find_pallas_eqns(closed.jaxpr, [])
+    if len(eqns) != 1:
+        raise ValueError(
+            f"expected exactly one pallas_call in the traced jaxpr, "
+            f"found {len(eqns)}")
+    eqn = eqns[0]
+    gm = eqn.params["grid_mapping"]
+    grid = tuple(int(g) for g in gm.grid)
+    in_shapes = list(gm.in_shapes)
+    out_shapes = list(gm.out_shapes)
+    n_prefetch = int(gm.num_index_operands)
+    if len(scalar_values) != n_prefetch:
+        raise ValueError(
+            f"kernel has {n_prefetch} scalar-prefetch operand(s); got "
+            f"{len(scalar_values)} scalar_values")
+
+    operands: list[OperandSpec] = []
+    for i, sds in enumerate(in_shapes[:n_prefetch]):
+        operands.append(_prefetch_spec(f"in{i}", sds))
+
+    block_mapped = (
+        [(f"in{i + n_prefetch}", "in", sds)
+         for i, sds in enumerate(in_shapes[n_prefetch:])]
+        + [(f"out{i}", "out", sds) for i, sds in enumerate(out_shapes)]
+    )
+    mappings = list(gm.block_mappings)
+    if len(mappings) != len(block_mapped):
+        raise ValueError(
+            f"block-mapping count {len(mappings)} != block-mapped operand "
+            f"count {len(block_mapped)}")
+    scalars = tuple(np.asarray(v) for v in scalar_values)
+    for (op_name, role, sds), bm in zip(block_mapped, mappings):
+        block_shape = tuple(
+            1 if b is None else int(b) for b in bm.block_shape)
+        table = _tabulate_index_map(bm.index_map_jaxpr, grid, scalars)
+        if table.shape[1] != len(block_shape):
+            raise ValueError(
+                f"{op_name}: index map returns {table.shape[1]} block "
+                f"indices for a rank-{len(block_shape)} block")
+        operands.append(OperandSpec(
+            name=op_name, role=role,
+            shape=tuple(int(d) for d in sds.shape),
+            block_shape=block_shape,
+            index_map=_table_index_map(table, grid),
+            elems_per_word=elems_per_word(
+                sds.dtype, block_shape[-1],
+                sds.shape[-1] if len(sds.shape) > 1 else 0),
+        ))
+
+    if name is None:
+        info = eqn.params.get("name_and_src_info")
+        name = getattr(info, "name", None) or "pallas_call"
+    return GridCapture(
+        name=name, grid=grid, operands=tuple(operands), flops=flops)

@@ -5,7 +5,13 @@ Each entry here runs a kernel capture hook
 resulting HBM word-address stream as a :class:`repro.core.tracegen.Workload`
 — the same record the synthetic families produce — so captured kernels flow
 through the unchanged Step-2/Step-3 pipeline (locality, cache simulation,
-classification, scalability).
+classification, scalability).  Six kernel families, 24 entries: STREAM
+copy/scale/add/triad x2 sizes, token_gather x2 tables, flash_attention x2
+KV geometries, paged-KV decode x4, MoE dispatch x4, chunked SSM scan x4.
+Hooks resolve their launch geometry by tracing the kernel's own
+``pallas_call`` jaxpr when jax is importable
+(:mod:`repro.capture.jaxpr` — zero mirroring) and fall back to mirrored
+data otherwise; the two paths are byte-identical by differential test.
 
 Modeling notes:
 
@@ -28,7 +34,11 @@ Modeling notes:
   invocation, MPKI tiny because AI is enormous) profiles as 1b, and the
   kv-split variant (per-core KV chunk shrinks with cores until it fits the
   private L2, so LFMR collapses) profiles as 1c.  The roster's AI column
-  keeps the compute-boundedness visible.
+  keeps the compute-boundedness visible.  The three serving-shaped
+  families each straddle the 1a/1b boundary on a real deployment knob:
+  paged-KV decode on the GQA group width (ops per fetched page), MoE
+  dispatch on the tokens-per-expert ratio (weight-tile amortization), and
+  the SSM scans on state expansion (pure streams vs chunk-local matmuls).
 
 Everything is deterministic: indices come from the crc32-seeded workload
 rng, there is no wall clock, and no TPU (or jax) is required.
@@ -43,6 +53,9 @@ import numpy as np
 
 from repro.core.tracegen import TraceSpec, Workload
 from repro.kernels.flash_attention import capture as flash_capture
+from repro.kernels.moe_dispatch import capture as moe_capture
+from repro.kernels.paged_kv_decode import capture as paged_capture
+from repro.kernels.ssm_scan import capture as ssm_capture
 from repro.kernels.stream import capture as stream_capture
 from repro.kernels.token_gather import capture as gather_capture
 
@@ -81,24 +94,27 @@ class CapturedKernel:
 
 
 def _stream_builder(op: str, n_elems: int):
-    def build(cores: int, rng: np.random.Generator) -> GridCapture:
+    def build(cores: int, rng: np.random.Generator,
+              path: str = "auto") -> GridCapture:
         del rng  # STREAM is index-free
-        return stream_capture.capture(op, n_elems, cores=cores)
+        return stream_capture.capture(op, n_elems, cores=cores, path=path)
     return build
 
 
 def _gather_builder(n_rows: int, d: int, m: int):
-    def build(cores: int, rng: np.random.Generator) -> GridCapture:
+    def build(cores: int, rng: np.random.Generator,
+              path: str = "auto") -> GridCapture:
         del cores  # thread-private slice of the global index stream
-        return gather_capture.capture(n_rows, d, m, rng=rng)
+        return gather_capture.capture(n_rows, d, m, rng=rng, path=path)
     return build
 
 
 def _flash_builder(sq: int, sk: int, d: int, partition: str):
-    def build(cores: int, rng: np.random.Generator) -> GridCapture:
+    def build(cores: int, rng: np.random.Generator,
+              path: str = "auto") -> GridCapture:
         del rng  # dense attention: no data-dependent addressing
         return flash_capture.capture(
-            sq=sq, sk=sk, d=d, cores=cores, partition=partition)
+            sq=sq, sk=sk, d=d, cores=cores, partition=partition, path=path)
     return build
 
 
@@ -198,8 +214,140 @@ def _flash_entries() -> list[CapturedKernel]:
     ]
 
 
+def _paged_builder(n_pages: int, page: int, d: int, h: int, n_active: int):
+    def build(cores: int, rng: np.random.Generator,
+              path: str = "auto") -> GridCapture:
+        del cores  # one decode sequence per thread over the shared pool
+        return paged_capture.capture(
+            n_pages=n_pages, page=page, d=d, h=h, n_active=n_active,
+            rng=rng, path=path)
+    return build
+
+
+def _moe_builder(n_tokens: int, d: int, f: int, n_experts: int):
+    def build(cores: int, rng: np.random.Generator,
+              path: str = "auto") -> GridCapture:
+        del cores  # thread-private token slice over the shared expert table
+        return moe_capture.capture(
+            n_tokens=n_tokens, d=d, f=f, n_experts=n_experts, rng=rng,
+            path=path)
+    return build
+
+
+def _ssm_builder(op: str, seq_len: int, d: int, n: int, chunk: int):
+    def build(cores: int, rng: np.random.Generator,
+              path: str = "auto") -> GridCapture:
+        del rng  # dense scan: no data-dependent addressing
+        return ssm_capture.capture(
+            op, seq_len=seq_len, d=d, n=n, chunk=chunk, cores=cores,
+            path=path)
+    return build
+
+
+# Paged-KV decode: the GQA group width h is the whole AI story — one query
+# head per KV head (MQA decode) moves ~4 ops per word and is DRAM-bound
+# over the randomly-paged pool (1a); widening the group to 8 heads
+# multiplies arithmetic per fetched page by 8, collapsing MPKI while the
+# page walk stays reuse-free -> latency-bound (1b).
+_GEO_PAGED = (
+    ("mqa.p32", "1a", dict(n_pages=8192, page=32, d=128, h=1, n_active=64)),
+    ("gqa8.p32", "1b", dict(n_pages=8192, page=32, d=128, h=8, n_active=64)),
+    ("mqa.p64", "1a", dict(n_pages=4096, page=64, d=128, h=1, n_active=32)),
+    ("gqa4.p16", "1b", dict(n_pages=16384, page=16, d=128, h=4,
+                            n_active=128)),
+)
+
+
+def _paged_entries() -> list[CapturedKernel]:
+    out = []
+    for tag, cls, geo in _GEO_PAGED:
+        out.append(CapturedKernel(
+            name=f"pal.pagedkv.{tag}",
+            kernel="pagedkv",
+            domain="TPU-kernel/serving-paged-kv",
+            expected_class=cls,
+            target_refs=0,
+            l3_shared=True,
+            mlp=6.0,
+            dram_rows_irregular=True,
+            instr_overhead=2.0,
+            builder=_paged_builder(**geo),
+            geometry=tuple(sorted(geo.items())),
+        ))
+    return out
+
+
+# MoE dispatch: the tokens-per-expert ratio decides the class.  Cold
+# experts (~1 token each) stream the whole weight table per batch at ~6
+# ops/word -> DRAM-bandwidth-bound (1a); long sorted runs amortize each
+# weight tile over many tokens, so arithmetic dominates and only the
+# irregular activation gather/scatter is left -> latency-bound (1b).
+_GEO_MOE = (
+    ("cold.64e", "1a", dict(n_tokens=64, d=128, f=128, n_experts=64)),
+    ("cold.96e", "1a", dict(n_tokens=96, d=128, f=128, n_experts=96)),
+    ("warm.8e", "1b", dict(n_tokens=512, d=128, f=256, n_experts=8)),
+    ("warm.32e", "1b", dict(n_tokens=256, d=128, f=128, n_experts=32)),
+)
+
+
+def _moe_entries() -> list[CapturedKernel]:
+    out = []
+    for tag, cls, geo in _GEO_MOE:
+        out.append(CapturedKernel(
+            name=f"pal.moe.{tag}",
+            kernel="moe",
+            domain="TPU-kernel/moe-dispatch",
+            expected_class=cls,
+            target_refs=0,
+            l3_shared=True,
+            mlp=8.0,
+            dram_rows_irregular=False,
+            instr_overhead=3.0,
+            builder=_moe_builder(**geo),
+            geometry=tuple(sorted(geo.items())),
+        ))
+    return out
+
+
+# Chunked SSM scan: the state never touches HBM, so the trace is pure
+# chunk-granular streaming.  The gated EMA scan moves ~3 ops per word ->
+# STREAM-class DRAM-bandwidth-bound (1a); the state-expanded (n=128)
+# chunked scan retires two chunk-local matmuls per block and profiles as
+# compute-heavy streaming (tiny MPKI, reuse-free -> 1b).
+_GEO_SSM = (
+    ("ema.1k.d128", "1a", dict(op="ema", seq_len=1024, d=128, n=0,
+                               chunk=128)),
+    ("ema.512.d256", "1a", dict(op="ema", seq_len=512, d=256, n=0,
+                                chunk=64)),
+    ("expand.512.d128", "1b", dict(op="expand", seq_len=512, d=128, n=128,
+                                   chunk=128)),
+    ("expand.512.d256", "1b", dict(op="expand", seq_len=512, d=256, n=128,
+                                   chunk=64)),
+)
+
+
+def _ssm_entries() -> list[CapturedKernel]:
+    out = []
+    for tag, cls, geo in _GEO_SSM:
+        out.append(CapturedKernel(
+            name=f"pal.ssm.{tag}",
+            kernel="ssm",
+            domain="TPU-kernel/ssm-scan",
+            expected_class=cls,
+            target_refs=0,
+            l3_shared=True,
+            mlp=8.0,
+            dram_rows_irregular=False,
+            instr_overhead=2.0,
+            builder=_ssm_builder(**geo),
+            geometry=tuple(sorted(geo.items())),
+        ))
+    return out
+
+
 CAPTURED_KERNELS: tuple[CapturedKernel, ...] = tuple(
     _stream_entries() + _gather_entries() + _flash_entries()
+    + _paged_entries() + _moe_entries() + _ssm_entries()
 )
 
 
@@ -229,7 +377,12 @@ def captured_workloads(
     out: list[Workload] = []
     for spec in specs:
         # Count-only walk: AI needs just the op/ref ratio, not the trace.
-        ref = walk(spec.builder(1, np.random.default_rng(0)),
+        # Forced onto the mirror path: every *registered* kernel keeps a
+        # jax-free mirror (the no-jax registry test requires it), the two
+        # paths are byte-identical by differential gate, and skipping the
+        # jaxpr trace keeps registry builds ~50x cheaper (the traced path
+        # still serves the actual trace generation below).
+        ref = walk(spec.builder(1, np.random.default_rng(0), path="mirror"),
                    count_only=True)
         ai = round(ref.flops_per_ref, 3)
         out.append(Workload(

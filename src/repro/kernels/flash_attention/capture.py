@@ -1,26 +1,27 @@
 """Capture hook: flash-attention launch geometry as a :class:`GridCapture`.
 
-Mirrors ``kernel.py``'s ``pallas_call``: grid ``(bh, n_q, n_kv)`` with the
-kv axis innermost, q/o blocks ``(1, bq, d)`` mapped on ``qi`` (so the
-pipeline re-fetches q only when ``qi`` changes and writes o once per q
-tile), and k/v blocks ``(1, bk, d)`` mapped on ``ki`` (re-fetched every kv
-step).  ``pl.when``-skipped causal tiles still DMA (the guard gates
-compute, not the automatic pipeline copies), so capture models the
-non-causal schedule.
-
-Two strong-scaling partitions, matching how multi-core attention is
-actually decomposed:
+Per-thread modeling — two strong-scaling partitions, matching how
+multi-core attention is actually decomposed:
 
 - ``partition="q"``  — query tiles are split across cores; K/V are read by
   every core (shared data -> ``l3_factor`` 1.0 upstream).
 - ``partition="kv"`` — the KV sequence is split flash-decoding style; each
   core sweeps its private chunk for every query tile (disjoint data ->
   ``l3_factor`` ~ 1/cores upstream).
+
+The geometry itself comes from the kernel: the default path traces
+``kernel.py``'s ``pallas_call`` over the per-thread sequence slice and
+walks its jaxpr (grid ``(bh, n_q, n_kv)`` with the kv axis innermost, q/o
+blocks mapped on ``qi``, k/v blocks mapped on ``ki``).  ``pl.when``-skipped
+causal tiles still DMA (the guard gates compute, not the automatic pipeline
+copies), so capture traces the non-causal schedule.  ``path="mirror"``
+keeps the jax-free mirrored geometry (differentially stream-identical).
 """
 
 from __future__ import annotations
 
 from repro.capture.grid import GridCapture, OperandSpec
+from repro.capture.jaxpr import capture_path, from_jaxpr, memoized
 
 __all__ = ["capture"]
 
@@ -30,7 +31,8 @@ _SOFTMAX_OPS_PER_SCORE = 6.0
 
 
 def capture(*, sq: int, sk: int, d: int, bq: int = 128, bk: int = 128,
-            cores: int = 1, partition: str = "q") -> GridCapture:
+            cores: int = 1, partition: str = "q",
+            path: str = "auto") -> GridCapture:
     """Per-thread geometry for one head of flash attention."""
     if sq % bq or sk % bk:
         raise ValueError(f"seq lens {(sq, sk)} not multiples of {(bq, bk)}")
@@ -43,6 +45,35 @@ def capture(*, sq: int, sk: int, d: int, bq: int = 128, bk: int = 128,
         raise ValueError(f"partition must be 'q'|'kv', got {partition!r}")
     sq_t, sk_t = n_q * bq, n_kv * bk
 
+    steps = n_q * n_kv
+    flops = steps * (4.0 * bq * bk * d + _SOFTMAX_OPS_PER_SCORE * bq * bk)
+    if capture_path(path) == "jaxpr":
+        return memoized(
+            ("flashattn", sq_t, sk_t, d, bq, bk),
+            lambda: _traced(sq_t, sk_t, d, bq, bk, flops))
+    return _mirror(sq_t, sk_t, d, bq, bk, n_q, n_kv, flops)
+
+
+def _traced(sq_t: int, sk_t: int, d: int, bq: int, bk: int,
+            flops: float) -> GridCapture:
+    """Trace the real kernel over the per-thread (sq_t, sk_t) slice."""
+    import jax
+    import jax.numpy as jnp
+
+    from .kernel import flash_attention
+
+    q = jax.ShapeDtypeStruct((1, sq_t, 1, d), jnp.float32)
+    kv = jax.ShapeDtypeStruct((1, sk_t, 1, d), jnp.float32)
+    return from_jaxpr(
+        lambda q, k, v: flash_attention(
+            q, k, v, causal=False, block_q=bq, block_k=bk),
+        (q, kv, kv), flops=flops, name="flash_attention")
+
+
+def _mirror(sq_t: int, sk_t: int, d: int, bq: int, bk: int,
+            n_q: int, n_kv: int, flops: float) -> GridCapture:
+    """Jax-free fallback: the ``pallas_call`` geometry as plain data."""
+
     def q_map(bh, qi, ki):
         return (bh, qi, 0)
 
@@ -52,8 +83,6 @@ def capture(*, sq: int, sk: int, d: int, bq: int = 128, bk: int = 128,
     qo = dict(shape=(1, sq_t, d), block_shape=(1, bq, d), index_map=q_map)
     kv = dict(shape=(1, sk_t, d), block_shape=(1, bk, d), index_map=kv_map)
 
-    steps = n_q * n_kv
-    flops = steps * (4.0 * bq * bk * d + _SOFTMAX_OPS_PER_SCORE * bq * bk)
     return GridCapture(
         name="flash_attention",
         grid=(1, n_q, n_kv),

@@ -1,0 +1,21 @@
+"""Jitted entry point for the MoE dispatch kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import moe_dispatch, moe_dispatch_sorted
+from .ref import moe_dispatch_ref
+
+__all__ = ["moe_dispatch", "moe_dispatch_sorted", "moe_dispatch_ref",
+           "dispatch"]
+
+
+def dispatch(x, w, expert_ids, *, interpret: bool | None = None):
+    on_tpu = jax.devices()[0].platform == "tpu"
+    if interpret is None:
+        interpret = not on_tpu
+    if (on_tpu or interpret) and x.shape[-1] % 128 == 0 \
+            and w.shape[-1] % 128 == 0:
+        return moe_dispatch(x, w, expert_ids, interpret=interpret)
+    return moe_dispatch_ref(x, w, expert_ids)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the MoE dispatch kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["moe_dispatch_ref"]
+
+
+def moe_dispatch_ref(x, w, expert_ids):
+    """x: [T, D]; w: [E, D, F]; expert_ids: [T] -> y: [T, F].
+
+    ``y[t] = x[t] @ w[expert_ids[t]]`` — the dense per-token gather-GEMM
+    the fused dispatch kernel implements via sorted scalar prefetch.
+    """
+    return jnp.einsum("td,tdf->tf", x, w[expert_ids]).astype(x.dtype)

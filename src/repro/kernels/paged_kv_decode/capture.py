@@ -1,0 +1,95 @@
+"""Capture hook: paged-KV decode launch geometry as a :class:`GridCapture`.
+
+Per-thread modeling: decode serving parallelizes across *sequences* (one
+decode step per sequence per core), so a thread's capture is one
+sequence's page walk — ``n_active`` pages drawn without replacement from
+the shared pool by the workload rng (real page allocators scatter a
+sequence's pages across the pool; sampling without replacement models
+that, and keeps every page distinct the way an allocator guarantees).
+The pool itself is shared between cores (``l3_shared`` upstream).
+
+Geometry comes from the kernel: the default path traces ``kernel.py``'s
+``PrefetchScalarGridSpec`` launch and walks its jaxpr with the concrete
+page table as the scalar-prefetch value; ``path="mirror"`` keeps the
+jax-free mirrored geometry (differentially stream-identical).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.capture.grid import GridCapture, OperandSpec
+from repro.capture.jaxpr import (capture_path, elems_per_word,
+                                from_jaxpr, memoized)
+
+__all__ = ["capture", "decode_flops"]
+
+# Online-softmax vector ops per score element (exp, max, scale, two fused
+# multiply-adds) on top of the two h x page x d matmuls per page.
+_SOFTMAX_OPS_PER_SCORE = 6.0
+
+
+def decode_flops(*, h: int, page: int, d: int, n_active: int) -> float:
+    """Arithmetic ops of one decode step over ``n_active`` pages."""
+    return n_active * (4.0 * h * page * d + _SOFTMAX_OPS_PER_SCORE * h * page)
+
+
+def capture(*, n_pages: int, page: int, d: int, h: int, n_active: int,
+            rng: np.random.Generator, path: str = "auto") -> GridCapture:
+    """Per-thread geometry: one sequence's decode step over the pool."""
+    if d % 128:
+        raise ValueError(f"d {d} must be a multiple of 128 (lane dim)")
+    if n_active > n_pages:
+        raise ValueError(f"n_active {n_active} exceeds pool size {n_pages}")
+    pt = rng.choice(n_pages, size=n_active, replace=False).astype(np.int64)
+    flops = decode_flops(h=h, page=page, d=d, n_active=n_active)
+    if capture_path(path) == "jaxpr":
+        return memoized(
+            ("paged_kv_decode", n_pages, page, d, h, pt.tobytes()),
+            lambda: _traced(n_pages, page, d, h, pt, flops))
+    return _mirror(n_pages, page, d, h, pt, flops)
+
+
+def _traced(n_pages: int, page: int, d: int, h: int, pt: np.ndarray,
+            flops: float) -> GridCapture:
+    import jax
+    import jax.numpy as jnp
+
+    from .kernel import paged_decode_attention
+
+    q = jax.ShapeDtypeStruct((h, d), jnp.float32)
+    kv = jax.ShapeDtypeStruct((n_pages, page, d), jnp.float32)
+    pt_sds = jax.ShapeDtypeStruct((pt.size,), jnp.int32)
+    return from_jaxpr(
+        paged_decode_attention, (q, kv, kv, pt_sds),
+        scalar_values=(pt.astype(np.int32),),
+        flops=flops, name="paged_kv_decode")
+
+
+def _mirror(n_pages: int, page: int, d: int, h: int, pt: np.ndarray,
+            flops: float) -> GridCapture:
+    """Jax-free fallback: the launch geometry as plain data."""
+    n_active = pt.size
+    kv = dict(shape=(n_pages, page, d), block_shape=(1, page, d))
+    qo = dict(shape=(h, d), block_shape=(h, d),
+              index_map=lambda i: (0, 0))
+    return GridCapture(
+        name="paged_kv_decode",
+        grid=(n_active,),
+        operands=(
+            OperandSpec(  # page table, scalar-prefetched once
+                name="pt", role="in", shape=(n_active,),
+                block_shape=(n_active,), index_map=lambda i: (0,),
+                elems_per_word=elems_per_word(np.int32, n_active),
+            ),
+            OperandSpec(name="q", role="in", **qo),
+            OperandSpec(name="k", role="in",
+                        index_map=lambda i, _pt=pt: (int(_pt[i]), 0, 0),
+                        **kv),
+            OperandSpec(name="v", role="in",
+                        index_map=lambda i, _pt=pt: (int(_pt[i]), 0, 0),
+                        **kv),
+            OperandSpec(name="o", role="out", **qo),
+        ),
+        flops=flops,
+    )

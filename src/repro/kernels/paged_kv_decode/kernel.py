@@ -1,0 +1,101 @@
+"""Paged-KV decode attention as a Pallas TPU kernel (scalar-prefetch DMA).
+
+One decode step of a serving engine with a vLLM-style paged KV cache: the
+sequence's KV lives in non-contiguous fixed-size pages of a global pool,
+and a per-sequence page table names the pages in order.  The page table is
+scalar-prefetched into SMEM ahead of the grid; each grid step's BlockSpec
+index map redirects the automatic HBM->VMEM DMA to page
+``page_table[i]`` of the K and V pools, and the online-softmax running
+state (m, l, acc) lives in VMEM scratch across the page axis — the same
+streaming-softmax structure as ``flash_attention``, but with the KV walk
+*data-dependent*, which is exactly DAMOV's irregular-access archetype
+realized at serving granularity.
+
+``q`` holds the ``h`` query heads of one GQA group sharing this KV head
+(``h = 1`` is MQA decode); it stays VMEM-resident for the whole grid (its
+index map is constant) and the normalized output is written back once on
+the last page.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["paged_decode_attention"]
+
+NEG_INF = -1e30
+
+
+def _kernel(pt_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, n_active: int):
+    del pt_ref  # consumed by the index maps
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...].astype(jnp.float32)            # [H, D]
+    k = k_ref[0].astype(jnp.float32)              # [page, D]
+    v = v_ref[0].astype(jnp.float32)              # [page, D]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale         # [H, page]
+
+    m_prev = m_scr[...]                           # [H, 1]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                        # [H, page]
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(i == n_active - 1)
+    def _finalize():
+        o_ref[...] = (acc_scr[...] /
+                      jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pages, v_pages, page_table, *,
+                           interpret: bool = False):
+    """q: [H, D]; k_pages, v_pages: [P, page, D]; page_table: [n] int32.
+
+    Attends the ``H`` grouped query heads over the ``n`` active pages named
+    by ``page_table`` (in order) and returns [H, D].
+    """
+    h, d = q.shape
+    _, page, _ = k_pages.shape
+    n_active = page_table.shape[0]
+    scale = d ** -0.5
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_active,),
+        in_specs=[
+            pl.BlockSpec((h, d), lambda i, pt: (0, 0)),          # q resident
+            pl.BlockSpec((1, page, d), lambda i, pt: (pt[i], 0, 0)),
+            pl.BlockSpec((1, page, d), lambda i, pt: (pt[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((h, d), lambda i, pt: (0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),   # running max
+            pltpu.VMEM((h, 1), jnp.float32),   # running denom
+            pltpu.VMEM((h, d), jnp.float32),   # running acc
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, n_active=n_active),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((h, d), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), q, k_pages, v_pages)

@@ -1,0 +1,21 @@
+"""Jitted entry point for the paged-KV decode kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import paged_decode_attention
+from .ref import paged_decode_ref
+
+__all__ = ["paged_decode_attention", "paged_decode_ref", "paged_decode"]
+
+
+def paged_decode(q, k_pages, v_pages, page_table, *,
+                 interpret: bool | None = None):
+    on_tpu = jax.devices()[0].platform == "tpu"
+    if interpret is None:
+        interpret = not on_tpu
+    if (on_tpu or interpret) and q.shape[-1] % 128 == 0:
+        return paged_decode_attention(q, k_pages, v_pages, page_table,
+                                      interpret=interpret)
+    return paged_decode_ref(q, k_pages, v_pages, page_table)

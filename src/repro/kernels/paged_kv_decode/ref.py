@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for paged-KV decode attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["paged_decode_ref"]
+
+
+def paged_decode_ref(q, k_pages, v_pages, page_table):
+    """q: [H, D]; k_pages, v_pages: [P, page, D]; page_table: [n] -> [H, D].
+
+    Gathers the active pages into one contiguous [n*page, D] KV view and
+    runs dense softmax attention over it.
+    """
+    h, d = q.shape
+    k = k_pages[page_table].reshape(-1, d)          # [n*page, D]
+    v = v_pages[page_table].reshape(-1, d)
+    s = (q @ k.T) * (d ** -0.5)                     # [H, n*page]
+    p = jnp.exp(s - s.max(axis=1, keepdims=True))
+    p = p / p.sum(axis=1, keepdims=True)
+    return (p @ v).astype(q.dtype)

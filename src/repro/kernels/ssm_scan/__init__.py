@@ -1,0 +1,9 @@
+from . import capture  # noqa: F401  (jax-free trace-capture hook)
+
+try:
+    from .kernel import ssm_chunked_scan, ssm_ema_scan  # noqa: F401
+    from .ops import chunked_scan, ema_scan  # noqa: F401
+    from .ref import ssm_chunked_ref, ssm_ema_ref  # noqa: F401
+except ImportError as e:  # jax absent: capture geometry stays importable
+    if not (e.name or "").startswith("jax"):
+        raise  # a real break in kernel/ops must not be masked

@@ -1,0 +1,34 @@
+"""Jitted entry points for the chunked SSM scan kernels."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import ssm_chunked_scan, ssm_ema_scan
+from .ref import ssm_chunked_ref, ssm_ema_ref
+
+__all__ = ["ssm_ema_scan", "ssm_chunked_scan", "ssm_ema_ref",
+           "ssm_chunked_ref", "ema_scan", "chunked_scan"]
+
+
+def _use_kernel(d: int, interpret: bool | None) -> tuple[bool, bool]:
+    on_tpu = jax.devices()[0].platform == "tpu"
+    if interpret is None:
+        interpret = not on_tpu
+    return (on_tpu or interpret) and d % 128 == 0, interpret
+
+
+def ema_scan(x, dt, g, *, chunk: int = 128, interpret: bool | None = None):
+    ok, interpret = _use_kernel(x.shape[-1], interpret)
+    if ok and x.shape[0] % chunk == 0:
+        return ssm_ema_scan(x, dt, g, chunk=chunk, interpret=interpret)
+    return ssm_ema_ref(x, dt, g)
+
+
+def chunked_scan(x, dt, b, c, *, chunk: int = 128,
+                 interpret: bool | None = None):
+    ok, interpret = _use_kernel(x.shape[-1], interpret)
+    if ok and x.shape[0] % chunk == 0:
+        return ssm_chunked_scan(x, dt, b, c, chunk=chunk,
+                                interpret=interpret)
+    return ssm_chunked_ref(x, dt, b, c)

@@ -1,0 +1,37 @@
+"""Pure-jnp (lax.scan) oracles for the chunked SSM scan kernels."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssm_ema_ref", "ssm_chunked_ref"]
+
+
+def ssm_ema_ref(x, dt, g):
+    """Sequential reference for the gated EMA scan."""
+    def step(h, inp):
+        xt, dtt, gt = inp
+        h = dtt * h + xt
+        return h, gt * h
+
+    h0 = jnp.zeros_like(x[0], jnp.float32)
+    _, y = jax.lax.scan(
+        step, h0, (x.astype(jnp.float32), dt.astype(jnp.float32),
+                   g.astype(jnp.float32)))
+    return y.astype(x.dtype)
+
+
+def ssm_chunked_ref(x, dt, b, c):
+    """Sequential reference for the state-expanded selective scan."""
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                     # [D], [D], [N], [N]
+        h = dtt[None, :] * h + bt[:, None] * xt[None, :]   # [N, D]
+        return h, (ct[:, None] * h).sum(axis=0)            # [D]
+
+    n = b.shape[1]
+    h0 = jnp.zeros((n, x.shape[1]), jnp.float32)
+    _, y = jax.lax.scan(
+        step, h0, (x.astype(jnp.float32), dt.astype(jnp.float32),
+                   b.astype(jnp.float32), c.astype(jnp.float32)))
+    return y.astype(x.dtype)

@@ -1,20 +1,20 @@
 """Capture hook: STREAM kernel launch geometry as a :class:`GridCapture`.
 
-Mirrors ``kernel.py``'s ``pallas_call`` exactly — grid ``(rows //
-block_rows,)``, array blocks ``(block_rows, LANES)`` with index map
-``i -> (i, 0)``, scalar operands broadcast from block ``(1,)`` — but as
-plain data, importable without jax (``tests/test_capture.py`` cross-checks
-the mirrored constants against ``kernel.py`` when jax is present).
-
-Strong scaling follows the kernel's natural parallelization: the row-tile
-grid is partitioned across cores, so a thread's capture is the launch over
-its ``n_elems / cores`` slice (at least one tile).  STREAM has no reuse,
-so the per-thread stream is the whole story.
+The hook's only real job is the *per-thread modeling choice*: strong
+scaling follows the kernel's natural parallelization (the row-tile grid is
+partitioned across cores, so a thread's capture is the launch over its
+``n_elems / cores`` slice, at least one tile).  The launch geometry itself
+comes from the kernel: the default path traces ``kernel.py``'s
+``pallas_call`` and walks its jaxpr (:func:`repro.capture.jaxpr.from_jaxpr`
+— zero mirroring); ``path="mirror"`` keeps the original hand-mirrored
+geometry as the jax-free fallback, differentially guaranteed
+stream-identical by ``tests/test_capture_jaxpr.py``.
 """
 
 from __future__ import annotations
 
 from repro.capture.grid import GridCapture, OperandSpec
+from repro.capture.jaxpr import capture_path, from_jaxpr, memoized
 
 __all__ = ["capture", "STREAM_OPS", "LANES", "DEFAULT_BLOCK_ROWS"]
 
@@ -32,15 +32,50 @@ STREAM_OPS: dict[str, tuple[tuple[str, ...], float]] = {
 
 
 def capture(op: str, n_elems: int, *, cores: int = 1,
-            block_rows: int = DEFAULT_BLOCK_ROWS) -> GridCapture:
+            block_rows: int = DEFAULT_BLOCK_ROWS,
+            path: str = "auto") -> GridCapture:
     """Per-thread launch geometry for one STREAM op over ``n_elems``."""
     if op not in STREAM_OPS:
         raise ValueError(f"unknown stream op {op!r}; expected {set(STREAM_OPS)}")
-    inputs, ops_per_elem = STREAM_OPS[op]
+    _, ops_per_elem = STREAM_OPS[op]
     tile_elems = block_rows * LANES
     if n_elems % tile_elems:
         raise ValueError(f"n_elems {n_elems} not a multiple of {tile_elems}")
     n_thread = max(tile_elems, n_elems // max(1, cores) // tile_elems * tile_elems)
+    flops = ops_per_elem * n_thread
+    if capture_path(path) == "jaxpr":
+        return memoized(
+            ("stream", op, n_thread, block_rows),
+            lambda: _traced(op, n_thread, block_rows, flops))
+    return _mirror(op, n_thread, block_rows, flops)
+
+
+def _traced(op: str, n_thread: int, block_rows: int,
+            flops: float) -> GridCapture:
+    """Trace the real kernel's ``pallas_call`` over the per-thread slice."""
+    import jax
+    import jax.numpy as jnp
+
+    from . import kernel as K
+
+    a = jax.ShapeDtypeStruct((n_thread,), jnp.float32)
+    q = jnp.float32(1.5)
+    fns = {
+        "copy": (K.stream_copy, (a,)),
+        "scale": (K.stream_scale, (a, q)),
+        "add": (K.stream_add, (a, a)),
+        "triad": (K.stream_triad, (a, a, q)),
+    }
+    fn, args = fns[op]
+    return from_jaxpr(
+        lambda *xs: fn(*xs, block_rows=block_rows), args,
+        flops=flops, name=f"stream_{op}")
+
+
+def _mirror(op: str, n_thread: int, block_rows: int,
+            flops: float) -> GridCapture:
+    """Jax-free fallback: the ``pallas_call`` geometry as plain data."""
+    inputs, _ = STREAM_OPS[op]
     rows = n_thread // LANES
     grid = (rows // block_rows,)
 
@@ -65,5 +100,5 @@ def capture(op: str, n_elems: int, *, cores: int = 1,
         name=f"stream_{op}",
         grid=grid,
         operands=tuple(operands),
-        flops=ops_per_elem * n_thread,
+        flops=flops,
     )

@@ -25,6 +25,32 @@ Workload identity is its *name*: the engine fingerprints each workload
 generator's code and closed-over parameters such as trace length) and
 refuses to mix two different workloads under one name — build one engine
 per suite (a :class:`~repro.study.Study` does this for you).
+
+Memo invariants this engine guarantees (and its tests enforce):
+
+- **Counter-identity across recall paths** — a memoized cell returns the
+  *same* :class:`~repro.core.cachesim.SimResult` object a fresh run would
+  produce: per-level hit/miss and prefetch counters are independent of
+  whether the cell came from :meth:`SimEngine.simulate`,
+  :meth:`SimEngine.simulate_batch` grouping, a ``sweep_parallel`` worker
+  thread, or the backend's per-trace ``StreamProfile`` memo underneath.
+- **Counter-identity across backends** — the ``vectorized`` and
+  ``reference`` backends are interchangeable cell for cell (the
+  differential matrix in ``tests/test_cachesim_vec.py``), so the memo key
+  does not need to include the backend; one engine still runs a single
+  backend for its whole lifetime so stats stay attributable.
+- **Exactly-once execution** — for any (workload name, seed, cores,
+  hierarchy-content) key, the underlying simulation runs at most once per
+  engine.  Duplicate cells inside one :meth:`SimEngine.simulate_batch`
+  call count as hits, not extra runs, and the batch's internal thread
+  fan-out is safe (workers compute; only the submitting thread writes
+  the memo).  The memo itself is *not* locked: callers must not submit
+  overlapping cells from multiple threads concurrently — share an engine
+  by batching through one thread (as every repo consumer does), or
+  overlapping cells may run twice.
+- **No cross-name aliasing** — :meth:`SimEngine.register` pins a name to
+  a workload fingerprint and raises on mismatch, so memoized results can
+  never leak between two workloads that happen to share a name.
 """
 
 from __future__ import annotations

@@ -14,7 +14,11 @@ from .registry import (  # noqa: F401
     SuiteRegistry,
     default_registry,
 )
-from .runner import ROSTER_COLUMNS, SuiteRunner  # noqa: F401
+from .runner import (  # noqa: F401
+    ROSTER_COLUMNS,
+    SECTION_COLUMNS,
+    SuiteRunner,
+)
 from .store import ResultStore, default_store_root  # noqa: F401
 
 __all__ = [
@@ -25,5 +29,6 @@ __all__ = [
     "ResultStore",
     "default_store_root",
     "ROSTER_COLUMNS",
+    "SECTION_COLUMNS",
     "SUITE_SCHEMA",
 ]

@@ -19,6 +19,9 @@ Examples::
     # full roster with whole entries fanned across one process per CPU
     python -m repro.suite --processes 0
 
+    # per-entry scalability + energy columns appended to every roster row
+    python -m repro.suite --fast --sections scalability,energy
+
     # prune store records from old schema versions
     python -m repro.suite --gc
 """
@@ -34,10 +37,21 @@ from repro.core.tracegen import DEFAULT_REFS
 from repro.study.cliutil import emit_tables, parse_cores
 
 from .registry import default_registry
-from .runner import SuiteRunner
+from .runner import SECTION_COLUMNS, SuiteRunner
 from .store import ResultStore, default_store_root
 
 FAST_REFS = 20_000
+
+
+def parse_sections(text: str) -> tuple[str, ...]:
+    """Comma list of roster sections -> validated tuple."""
+    sections = tuple(s.strip() for s in text.split(",") if s.strip())
+    unknown = set(sections) - set(SECTION_COLUMNS)
+    if unknown:
+        raise argparse.ArgumentTypeError(
+            f"unknown section(s) {sorted(unknown)}; "
+            f"choose from {sorted(SECTION_COLUMNS)}")
+    return sections
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -58,6 +72,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--backend", choices=BACKENDS, default=None,
                     help="cache-simulation implementation; default: "
                          "$REPRO_SIM_BACKEND or 'vectorized'")
+    ap.add_argument("--sections", type=parse_sections, default=(),
+                    metavar="S[,S]",
+                    help="append per-entry roster sections: "
+                         f"{','.join(sorted(SECTION_COLUMNS))} (computed "
+                         "from the same memoized engine cells; stored "
+                         "under section-specific record keys)")
     ap.add_argument("--processes", type=int, default=1, metavar="N",
                     help="fan whole entries across N worker processes "
                          "(0 = one per CPU; default 1 = in-process)")
@@ -118,7 +138,7 @@ def main(argv: list[str] | None = None) -> int:
     store = None if args.no_store else ResultStore(args.store)
     runner = SuiteRunner(registry, seed=args.seed, cores=args.cores,
                          backend=args.backend, store=store,
-                         processes=args.processes)
+                         processes=args.processes, sections=args.sections)
     tables = [runner.roster(), runner.histogram()]
     emit_tables(tables, fmt=args.format, out=args.out)
 

@@ -11,7 +11,29 @@ parameter metadata the Table-3-style roster reports.
 :func:`default_registry` builds the standard roster: a footprint /
 stride / reuse-depth grid over every synthetic family (three points per
 family, chosen inside the jitter envelope the §3.5 validation sweep
-exercises) plus every captured kernel — 33 entries.
+exercises) plus every captured kernel — 45 entries (21 synthetic + 24
+captured across six Pallas kernel families).
+
+Identity invariants this module owes its consumers:
+
+- **Name uniqueness** — :meth:`SuiteRegistry.register` rejects duplicate
+  workload names; downstream, :class:`repro.study.engine.SimEngine` keys
+  its trace/simulation memo on the name, so a duplicate here would
+  silently alias two different traces under one cache entry.
+- **Content-addressed fingerprints** — :meth:`SuiteEntry.fingerprint`
+  hashes everything that determines a stored roster row (schema, name,
+  source, domain, expected class, *geometry params*, AI, seed, cores,
+  backend).  Any geometry edit must change ``params`` (the capture hooks
+  pass their problem geometry verbatim) so stale store rows become
+  unreachable rather than wrongly recalled.
+- **Capture-path independence** — captured entries produce byte-identical
+  traces whether the hook resolved its geometry from the kernel's jaxpr
+  or from the mirrored fallback (differential-tested), so fingerprints
+  deliberately do *not* encode the capture path.
+- **Reconstructibility** — a registry carrying the ``refs`` marker can be
+  rebuilt bit-identically by ``default_registry(refs=...)`` in a worker
+  process; the runner cross-checks entry *and* workload fingerprints
+  before trusting a worker with an entry.
 """
 
 from __future__ import annotations
@@ -64,13 +86,17 @@ class SuiteEntry:
         return self.workload.expected_class
 
     def fingerprint(self, *, seed: int, cores: tuple[int, ...],
-                    backend: str = "vectorized") -> str:
+                    backend: str = "vectorized",
+                    sections: tuple[str, ...] = ()) -> str:
         """Content address of this entry's characterization record.
 
         ``backend`` is part of the key even though the two cachesim
         implementations are counter-identical by contract: an explicit
         ``--backend reference`` cross-check must actually *run* the
         reference loop, not recall the vectorized rows from the store.
+        ``sections`` (extra roster columns) joins the key only when
+        non-empty, so plain-roster keys — including every record written
+        before sections existed — stay stable.
         """
         payload = {
             "schema": SUITE_SCHEMA,
@@ -85,6 +111,8 @@ class SuiteEntry:
             "cores": list(cores),
             "backend": backend,
         }
+        if sections:
+            payload["sections"] = list(sections)
         blob = json.dumps(payload, sort_keys=True).encode()
         return hashlib.sha256(blob).hexdigest()
 
@@ -191,7 +219,7 @@ _SYNTH_DOMAINS = {
 
 
 def default_registry(*, refs: int | None = None) -> SuiteRegistry:
-    """The standard roster: 21 synthetic grid points + 12 captured kernels.
+    """The standard roster: 21 synthetic grid points + 24 captured kernels.
 
     ``refs`` is the synthetic trace length
     (default :data:`repro.core.tracegen.DEFAULT_REFS`); captured traces

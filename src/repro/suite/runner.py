@@ -9,6 +9,12 @@ entry row is persisted to a content-addressed :class:`ResultStore`, so
 re-running a suite re-simulates only the missing cells; recalled rows are
 byte-identical to freshly computed ones (they store the rounded values).
 
+Optional roster sections (``sections=("scalability", "energy")`` /
+``--sections``) append per-entry scalability and energy columns computed
+from the same memoized engine cells; sectioned rows are stored under
+section-specific record keys so plain and sectioned rosters never recall
+each other's rows.
+
 Entry-level process fan-out: with ``processes > 1`` the runner
 characterizes whole entries — not just core-sweep cells — across a
 :class:`~concurrent.futures.ProcessPoolExecutor`.  Workload generators
@@ -37,12 +43,22 @@ from repro.study.study import Study
 from .registry import LEGACY_SCHEMA, SUITE_SCHEMA, SuiteEntry, SuiteRegistry
 from .store import ResultStore
 
-__all__ = ["SuiteRunner", "ROSTER_COLUMNS", "CLASSES"]
+__all__ = ["SuiteRunner", "ROSTER_COLUMNS", "SECTION_COLUMNS", "CLASSES"]
 
 ROSTER_COLUMNS = (
     "name", "domain", "source", "expected", "assigned", "match",
     "spatial", "temporal", "ai", "mpki", "lfmr_mean", "lfmr_slope",
 )
+
+# Optional per-entry roster sections (``--sections``): extra columns
+# appended to every row, computed from the same memoized engine cells.
+# ``scalability``: host strong-scaling speedup and the NDP-vs-host speedup
+# at the sweep's top core count (paper Figs. 5/16).  ``energy``: per-thread
+# host and NDP energy at the top core count plus their ratio (Figs. 7-17).
+SECTION_COLUMNS: dict[str, tuple[str, ...]] = {
+    "scalability": ("host_speedup", "ndp_speedup"),
+    "energy": ("host_mj", "ndp_mj", "ndp_energy_ratio"),
+}
 CLASSES = classify.CLASSES
 
 
@@ -57,19 +73,20 @@ class RunStats:
 
 @functools.lru_cache(maxsize=1)
 def _worker_runner(refs: int, seed: int, cores: tuple[int, ...],
-                   backend: str) -> "SuiteRunner":
+                   backend: str,
+                   sections: tuple[str, ...]) -> "SuiteRunner":
     """Per-process runner over a rebuilt default registry (fork/spawn-safe:
     constructed on first task, reused for every entry the worker gets)."""
     from .registry import default_registry
 
     return SuiteRunner(default_registry(refs=refs), seed=seed, cores=cores,
-                       backend=backend, store=None)
+                       backend=backend, store=None, sections=sections)
 
 
 def _characterize_entry(task: tuple) -> tuple:
     """Process-pool task: one entry's roster row, by name."""
-    name, refs, seed, cores, backend = task
-    runner = _worker_runner(refs, seed, cores, backend)
+    name, refs, seed, cores, backend, sections = task
+    runner = _worker_runner(refs, seed, cores, backend, sections)
     entry = next(e for e in runner.registry if e.name == name)
     return runner._characterize(entry)
 
@@ -86,6 +103,7 @@ class SuiteRunner:
         backend: str | None = None,
         store: ResultStore | None = None,
         processes: int | None = None,
+        sections: tuple[str, ...] = (),
     ) -> None:
         self.registry = registry
         self.seed = seed
@@ -96,6 +114,15 @@ class SuiteRunner:
         self.backend = backend if backend is not None else \
             cachesim.default_backend()
         self.processes = processes
+        unknown = set(sections) - set(SECTION_COLUMNS)
+        if unknown:
+            raise ValueError(
+                f"unknown roster section(s) {sorted(unknown)}; expected a "
+                f"subset of {sorted(SECTION_COLUMNS)}")
+        # canonical order, so column layout never depends on CLI order
+        self.sections = tuple(s for s in SECTION_COLUMNS if s in sections)
+        self.columns: tuple[str, ...] = ROSTER_COLUMNS + tuple(
+            c for s in self.sections for c in SECTION_COLUMNS[s])
         self.study = Study(
             suite=registry.workloads(), seed=seed, cores=self.cores,
             engine=SimEngine(backend=self.backend),
@@ -110,23 +137,45 @@ class SuiteRunner:
         spatial, temporal = self.study.locality(w)
         m = self.study.metrics(w)
         assigned = classify.classify(m)
-        return (
+        row = (
             entry.name, entry.domain, entry.source, entry.expected_class,
             assigned, int(assigned == entry.expected_class),
             round(spatial, 3), round(temporal, 3), round(m.ai, 3),
             round(m.mpki, 2), round(m.lfmr_mean, 3), round(m.lfmr_slope, 3),
         )
+        for section in self.sections:
+            row += self._section_values(section, entry)
+        return row
+
+    def _section_values(self, section: str, entry: SuiteEntry) -> tuple:
+        """Extra per-entry columns, from the same memoized engine cells."""
+        r = self.study.scalability(entry.workload)
+        host = r.points["host"]
+        ndp = r.points["ndp"]
+        if section == "scalability":
+            return (round(host[-1].perf / host[0].perf, 3),
+                    round(ndp[-1].perf / host[-1].perf, 3))
+        # energy: per-thread J -> mJ at the sweep's top core count; the
+        # ratio is derived from the rounded columns so the row is
+        # internally consistent after a store round-trip
+        host_mj = round(host[-1].energy.total_j * 1e3, 6)
+        ndp_mj = round(ndp[-1].energy.total_j * 1e3, 6)
+        return (host_mj, ndp_mj,
+                round(ndp_mj / host_mj if host_mj else 0.0, 3))
+
+    def _fingerprint(self, entry: SuiteEntry) -> str:
+        return entry.fingerprint(seed=self.seed, cores=self.cores,
+                                 backend=self.backend,
+                                 sections=self.sections)
 
     def _recall(self, entry: SuiteEntry) -> tuple | None:
         """Store lookup for one entry; caches and counts on hit."""
         if self.store is None:
             return None
-        key = entry.fingerprint(seed=self.seed, cores=self.cores,
-                                backend=self.backend)
-        rec = self.store.get(key)
+        rec = self.store.get(self._fingerprint(entry))
         if (rec is not None
                 and rec.get("schema", LEGACY_SCHEMA) == SUITE_SCHEMA
-                and rec.get("columns") == list(ROSTER_COLUMNS)):
+                and rec.get("columns") == list(self.columns)):
             row = tuple(rec["row"])
             self._rows[entry.name] = row
             self.stats.recalled += 1
@@ -137,11 +186,10 @@ class SuiteRunner:
         self._rows[entry.name] = row
         self.stats.computed += 1
         if self.store is not None:
-            key = entry.fingerprint(seed=self.seed, cores=self.cores,
-                                    backend=self.backend)
-            self.store.put(key, {"schema": SUITE_SCHEMA,
-                                 "columns": list(ROSTER_COLUMNS),
-                                 "row": list(row)})
+            self.store.put(self._fingerprint(entry),
+                           {"schema": SUITE_SCHEMA,
+                            "columns": list(self.columns),
+                            "row": list(row)})
 
     def row(self, entry: SuiteEntry) -> tuple:
         """One roster row, store-first (computed and persisted on miss)."""
@@ -196,7 +244,7 @@ class SuiteRunner:
         if remote:
             tasks = [
                 (e.name, self.registry.refs, self.seed, self.cores,
-                 self.backend)
+                 self.backend, self.sections)
                 for e in remote
             ]
             # spawn, not fork: the parent may have JAX (or another
@@ -243,7 +291,7 @@ class SuiteRunner:
     def roster(self) -> StudyResult:
         """The Table-3-style roster: one row per entry, both sources."""
         self.compute_all()
-        res = StudyResult("suite_roster", ROSTER_COLUMNS)
+        res = StudyResult("suite_roster", self.columns)
         for entry in self.registry:
             res.append(self.row(entry))
         return res

@@ -3,7 +3,8 @@
 Covers the grid walker's pipeline semantics (revisit-skip fetches,
 write-back-on-last-visit stores), footprint/coverage identity against the
 declared launch geometry, determinism, and — when jax is importable — the
-consistency of the mirrored geometry constants with the real kernels.
+consistency of the mirrored fallback geometry with the real kernels.
+The jaxpr-vs-mirror differential gate lives in ``test_capture_jaxpr.py``.
 """
 
 import numpy as np
@@ -108,10 +109,14 @@ class TestWalker:
 class TestCapturedWorkloads:
     def test_roster_shape(self):
         ws = captured_workloads()
-        assert len(ws) == len(CAPTURED_KERNELS) == 12
-        assert len({w.name for w in ws}) == 12
+        assert len(ws) == len(CAPTURED_KERNELS) == 24
+        assert len({w.name for w in ws}) == 24
         kernels = {s.kernel for s in CAPTURED_KERNELS}
-        assert kernels == {"stream", "gather", "flashattn"}
+        assert kernels == {"stream", "gather", "flashattn",
+                           "pagedkv", "moe", "ssm"}
+        # every new family contributes >= 2 geometry points
+        for kernel in kernels:
+            assert sum(s.kernel == kernel for s in CAPTURED_KERNELS) >= 2
         for spec in CAPTURED_KERNELS:
             assert spec.expected_class in ("1a", "1b", "1c")
 
@@ -180,7 +185,7 @@ def test_capture_and_suite_importable_without_jax():
         [sys.executable, "-c", code], env=env, capture_output=True,
         text=True, check=True,
     )
-    assert out.stdout.split() == ["33", "1a"]
+    assert out.stdout.split() == ["45", "1a"]
 
 
 # --------------------------------------------------------------------------

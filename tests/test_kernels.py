@@ -132,3 +132,142 @@ def test_gather_repeated_and_boundary_indices():
     out = gather_rows(table, idx, interpret=True)
     np.testing.assert_array_equal(np.asarray(out),
                                   np.asarray(table)[np.asarray(idx)])
+
+
+# --------------------------------------------------------------------------
+# paged-KV decode attention
+# --------------------------------------------------------------------------
+PAGED_CASES = [
+    # (h, d, n_pages, page, n_active)
+    (1, 128, 32, 16, 8),      # MQA decode
+    (8, 128, 64, 32, 16),     # GQA group of 8
+    (4, 256, 16, 8, 16),      # every page active
+    (2, 128, 64, 16, 1),      # single-page sequence
+]
+
+
+@pytest.mark.parametrize("case", PAGED_CASES)
+def test_paged_decode_matches_ref(case):
+    from repro.kernels.paged_kv_decode import (paged_decode_attention,
+                                               paged_decode_ref)
+
+    h, d, n_pages, page, n_active = case
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (h, d), jnp.float32)
+    kp = jax.random.normal(ks[1], (n_pages, page, d), jnp.float32)
+    vp = jax.random.normal(ks[2], (n_pages, page, d), jnp.float32)
+    pt = jax.random.permutation(ks[3], n_pages)[:n_active].astype(jnp.int32)
+    out = paged_decode_attention(q, kp, vp, pt, interpret=True)
+    ref = paged_decode_ref(q, kp, vp, pt)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=1e-4)
+
+
+def test_paged_decode_page_order_invariance():
+    """Softmax attention is permutation-invariant in the KV positions, so
+    shuffling the page table must not change the output."""
+    from repro.kernels.paged_kv_decode import paged_decode_attention
+
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (4, 128), jnp.float32)
+    kp = jax.random.normal(ks[1], (32, 16, 128), jnp.float32)
+    vp = jax.random.normal(ks[2], (32, 16, 128), jnp.float32)
+    pt = jax.random.permutation(ks[3], 32)[:8].astype(jnp.int32)
+    a = paged_decode_attention(q, kp, vp, pt, interpret=True)
+    b = paged_decode_attention(q, kp, vp, pt[::-1], interpret=True)
+    np.testing.assert_allclose(a, b, atol=2e-5, rtol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# MoE dispatch
+# --------------------------------------------------------------------------
+MOE_CASES = [
+    # (T, d, f, E)
+    (32, 128, 128, 4),
+    (64, 128, 256, 16),
+    (16, 256, 128, 2),
+    (8, 128, 128, 8),      # more experts than tokens: some never hit
+]
+
+
+@pytest.mark.parametrize("case", MOE_CASES)
+def test_moe_dispatch_matches_ref(case):
+    from repro.kernels.moe_dispatch import moe_dispatch, moe_dispatch_ref
+
+    t, d, f, e = case
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (t, d), jnp.float32)
+    w = jax.random.normal(ks[1], (e, d, f), jnp.float32) / np.sqrt(d)
+    eids = jax.random.randint(ks[2], (t,), 0, e, jnp.int32)
+    out = moe_dispatch(x, w, eids, interpret=True)
+    ref = moe_dispatch_ref(x, w, eids)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=1e-4)
+
+
+def test_moe_dispatch_single_expert_is_dense_gemm():
+    from repro.kernels.moe_dispatch import moe_dispatch
+
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (16, 128), jnp.float32)
+    w = jax.random.normal(ks[1], (1, 128, 128), jnp.float32) / np.sqrt(128)
+    out = moe_dispatch(x, w, jnp.zeros(16, jnp.int32), interpret=True)
+    np.testing.assert_allclose(out, x @ w[0], atol=2e-5, rtol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# chunked SSM scans
+# --------------------------------------------------------------------------
+def _ssm_inputs(t, d, n=None):
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (t, d), jnp.float32)
+    # dt in (0.95, 0.999): the chunk closed form divides by the running
+    # decay product, so the test stays in its documented precision regime
+    dt = jax.random.uniform(ks[1], (t, d), jnp.float32, 0.95, 0.999)
+    if n is None:
+        g = jax.random.normal(ks[2], (t, d), jnp.float32)
+        return x, dt, g
+    b = jax.random.normal(ks[2], (t, n), jnp.float32) / np.sqrt(n)
+    c = jax.random.normal(ks[3], (t, n), jnp.float32)
+    return x, dt, b, c
+
+
+@pytest.mark.parametrize("chunk", [32, 64, 128])
+def test_ssm_ema_matches_ref(chunk):
+    from repro.kernels.ssm_scan import ssm_ema_ref, ssm_ema_scan
+
+    x, dt, g = _ssm_inputs(256, 128)
+    out = ssm_ema_scan(x, dt, g, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(out, ssm_ema_ref(x, dt, g),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_ssm_ema_chunk_invariance():
+    """The chunked closed form must not depend on the chunk boundary."""
+    from repro.kernels.ssm_scan import ssm_ema_scan
+
+    x, dt, g = _ssm_inputs(256, 128)
+    a = ssm_ema_scan(x, dt, g, chunk=32, interpret=True)
+    b = ssm_ema_scan(x, dt, g, chunk=256, interpret=True)
+    np.testing.assert_allclose(a, b, atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("case", [(256, 128, 128, 64), (128, 256, 128, 32),
+                                  (64, 128, 256, 64)])
+def test_ssm_chunked_matches_ref(case):
+    from repro.kernels.ssm_scan import ssm_chunked_ref, ssm_chunked_scan
+
+    t, d, n, chunk = case
+    x, dt, b, c = _ssm_inputs(t, d, n)
+    out = ssm_chunked_scan(x, dt, b, c, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(out, ssm_chunked_ref(x, dt, b, c),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_ssm_state_carries_across_chunks():
+    """With dt == 1 and g == 1 the EMA scan is a running sum; its final
+    row must equal the full-sequence sum even across chunk boundaries."""
+    from repro.kernels.ssm_scan import ssm_ema_scan
+
+    x = jax.random.normal(KEY, (256, 128), jnp.float32)
+    ones = jnp.ones_like(x)
+    out = ssm_ema_scan(x, ones, ones, chunk=64, interpret=True)
+    np.testing.assert_allclose(out[-1], x.sum(axis=0), atol=1e-3, rtol=1e-4)

@@ -1,0 +1,125 @@
+"""Tests for the CI perf-regression gate (benchmarks.perf_gate)."""
+
+import io
+import json
+
+import pytest
+
+from benchmarks import perf_gate
+
+
+def _record(sections: dict[str, float]) -> dict:
+    return {"runs": {"cfg": {"sections": {
+        name: {"seconds": s, "rows": 1} for name, s in sections.items()
+    }}}}
+
+
+class TestGate:
+    def test_within_ratio_passes(self):
+        fails = perf_gate.gate({"a": 2.0, "b": 4.0}, {"a": 3.9, "b": 4.0},
+                               max_ratio=2.0, min_seconds=0.75,
+                               out=io.StringIO())
+        assert fails == []
+
+    def test_regression_fails(self):
+        fails = perf_gate.gate({"a": 2.0, "b": 1.0}, {"a": 4.1, "b": 1.0},
+                               max_ratio=2.0, min_seconds=0.75,
+                               out=io.StringIO())
+        assert fails == ["a"]
+
+    def test_fast_baseline_compared_against_floor(self):
+        # 0.0s baseline: 1.0s current is under 2 * 0.75 floor -> pass,
+        # 2.0s current is over -> fail
+        ok = perf_gate.gate({"a": 0.0}, {"a": 1.0}, max_ratio=2.0,
+                            min_seconds=0.75, out=io.StringIO())
+        assert ok == []
+        bad = perf_gate.gate({"a": 0.0}, {"a": 2.0}, max_ratio=2.0,
+                             min_seconds=0.75, out=io.StringIO())
+        assert bad == ["a"]
+
+    def test_one_sided_sections_are_informational(self):
+        out = io.StringIO()
+        fails = perf_gate.gate({"gone": 5.0}, {"new": 50.0},
+                               max_ratio=2.0, min_seconds=0.75, out=out)
+        assert fails == []
+        text = out.getvalue()
+        assert "absent from current" in text and "no baseline" in text
+
+
+class TestCLI:
+    def _write(self, path, sections):
+        path.write_text(json.dumps(_record(sections)))
+
+    def test_end_to_end_pass_and_fail(self, tmp_path):
+        base, cur = tmp_path / "base.json", tmp_path / "cur.json"
+        self._write(base, {"a": 2.0})
+        self._write(cur, {"a": 2.5})
+        args = ["--baseline", str(base), "--current", str(cur),
+                "--config", "cfg"]
+        assert perf_gate.main(args) == 0
+        self._write(cur, {"a": 9.0})
+        assert perf_gate.main(args) == 1
+
+    def test_missing_config_bucket_errors(self, tmp_path):
+        base = tmp_path / "base.json"
+        self._write(base, {"a": 1.0})
+        with pytest.raises(SystemExit, match="no 'nope' bucket"):
+            perf_gate.main(["--baseline", str(base),
+                            "--current", str(base), "--config", "nope"])
+
+    def test_committed_record_has_the_gate_bucket(self):
+        """The committed baseline must stay consumable by the CI gate."""
+        sections = perf_gate.load_sections(perf_gate.DEFAULT_BASELINE,
+                                           perf_gate.DEFAULT_CONFIG)
+        assert "table3" in sections and "fig1" in sections
+
+
+def test_skip_excludes_sections(tmp_path):
+    base, cur = tmp_path / "base.json", tmp_path / "cur.json"
+    base.write_text(json.dumps(_record({"a": 1.0, "kern": 1.0})))
+    cur.write_text(json.dumps(_record({"a": 1.0, "kern": 50.0})))
+    args = ["--baseline", str(base), "--current", str(cur),
+            "--config", "cfg"]
+    assert perf_gate.main(args) == 1
+    assert perf_gate.main(args + ["--skip", "kern"]) == 0
+
+
+class TestSpeedNormalization:
+    def test_factor_scales_baseline(self):
+        # current machine 2x slower -> a 2x wall-clock increase is not a
+        # regression once normalized
+        fails = perf_gate.gate({"a": 4.0}, {"a": 8.5}, max_ratio=2.0,
+                               min_seconds=0.75, factor=2.0,
+                               out=io.StringIO())
+        assert fails == []
+        fails = perf_gate.gate({"a": 4.0}, {"a": 8.5}, max_ratio=2.0,
+                               min_seconds=0.75, factor=1.0,
+                               out=io.StringIO())
+        assert fails == ["a"]
+
+    def test_speed_factor_caps_and_defaults(self):
+        assert perf_gate.speed_factor(0.0, 1.0) == 1.0
+        assert perf_gate.speed_factor(1.0, 0.0) == 1.0
+        assert perf_gate.speed_factor(1.0, 2.0) == 2.0
+        assert perf_gate.speed_factor(1.0, 100.0) == 4.0   # capped
+        assert perf_gate.speed_factor(100.0, 1.0) == 0.25  # capped
+
+    def test_end_to_end_normalized(self, tmp_path):
+        def write(path, sec, cal):
+            rec = _record(sec)
+            rec["runs"]["cfg"]["meta"] = {"calibration_seconds": cal}
+            path.write_text(json.dumps(rec))
+
+        base, cur = tmp_path / "base.json", tmp_path / "cur.json"
+        write(base, {"a": 4.0}, 0.5)
+        write(cur, {"a": 10.0}, 1.25)  # 2.5x slower machine, same code
+        args = ["--baseline", str(base), "--current", str(cur),
+                "--config", "cfg"]
+        assert perf_gate.main(args) == 0
+        write(cur, {"a": 10.0}, 0.5)   # same machine speed: regression
+        assert perf_gate.main(args) == 1
+
+    def test_committed_record_carries_calibration(self):
+        _, cal = perf_gate._load_bucket(perf_gate.DEFAULT_BASELINE,
+                                        perf_gate.DEFAULT_CONFIG)
+        assert cal > 0.0

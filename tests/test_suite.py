@@ -45,17 +45,18 @@ def _tiny_registry(*, with_captured: bool = False,
 class TestRegistry:
     def test_default_roster_size_and_sources(self):
         reg = default_registry(refs=REFS)
-        assert len(reg) >= 30
+        assert len(reg) >= 45
         synth = reg.by_source("synthetic")
         captured = reg.by_source("captured")
-        assert len(synth) >= 18 and len(captured) >= 10
+        assert len(synth) >= 18 and len(captured) >= 24
         assert len(synth) + len(captured) == len(reg)
         names = [e.name for e in reg]
         assert len(set(names)) == len(names)
         # every synthetic family and every kernel family is represented
         assert {e.workload.family for e in synth} == set(tracegen.FAMILIES)
         assert {e.workload.family for e in captured} == {
-            "pallas-stream", "pallas-gather", "pallas-flashattn"}
+            "pallas-stream", "pallas-gather", "pallas-flashattn",
+            "pallas-pagedkv", "pallas-moe", "pallas-ssm"}
 
     def test_duplicate_name_rejected(self):
         reg = _tiny_registry()
@@ -338,8 +339,11 @@ class TestSubstrateAndCLI:
         assert main(["--list"]) == 0
         out = capsys.readouterr().out
         assert "pal.flashattn.d64.kv20k" in out
+        assert "pal.pagedkv.mqa.p32" in out
+        assert "pal.moe.cold.64e" in out
+        assert "pal.ssm.expand.512.d128" in out
         assert "syn.gemm.1.8xL1" in out
-        assert "21 synthetic, 12 captured" in out
+        assert "21 synthetic, 24 captured" in out
 
     @pytest.mark.slow  # full captured traces through the simulator (~20 s)
     def test_cli_fast_roster_deterministic_and_checked(self, tmp_path):
@@ -355,7 +359,124 @@ class TestSubstrateAndCLI:
         text = out1.read_text()
         assert text.startswith("## suite_roster")
         assert "## class_histogram" in text
-        # >= 30 entries spanning both sources
+        # >= 45 entries spanning both sources
         roster = text.split("## class_histogram")[0].splitlines()
         assert sum(1 for l in roster if ",synthetic," in l) == 21
-        assert sum(1 for l in roster if ",captured," in l) == 12
+        assert sum(1 for l in roster if ",captured," in l) == 24
+
+
+# --------------------------------------------------------------------------
+# Roster sections (--sections scalability,energy)
+# --------------------------------------------------------------------------
+class TestRosterSections:
+    def test_section_columns_appended_in_canonical_order(self):
+        from repro.suite import ROSTER_COLUMNS, SECTION_COLUMNS
+
+        # CLI order must not change the layout
+        r1 = SuiteRunner(_tiny_registry(), cores=CORES,
+                         sections=("energy", "scalability"))
+        r2 = SuiteRunner(_tiny_registry(), cores=CORES,
+                         sections=("scalability", "energy"))
+        expect = ROSTER_COLUMNS + SECTION_COLUMNS["scalability"] \
+            + SECTION_COLUMNS["energy"]
+        assert r1.columns == r2.columns == expect
+        res = r1.roster()
+        assert res.columns == expect
+        for rec in res.records():
+            assert rec["host_speedup"] > 0
+            assert rec["ndp_speedup"] > 0
+            assert rec["host_mj"] > 0 and rec["ndp_mj"] > 0
+            assert rec["ndp_energy_ratio"] == pytest.approx(
+                rec["ndp_mj"] / rec["host_mj"], abs=2e-3)
+
+    def test_unknown_section_rejected(self):
+        with pytest.raises(ValueError, match="unknown roster section"):
+            SuiteRunner(_tiny_registry(), cores=CORES,
+                        sections=("bogus",))
+
+    def test_sectioned_rows_get_their_own_store_keys(self, tmp_path):
+        """Sectioned and plain rosters must not recall each other's
+        records; plain keys are unchanged by the sections feature."""
+        store = ResultStore(tmp_path)
+        reg = _tiny_registry()
+        e = reg.entries[0]
+        base = e.fingerprint(seed=0, cores=CORES)
+        assert base == e.fingerprint(seed=0, cores=CORES, sections=())
+        assert base != e.fingerprint(seed=0, cores=CORES,
+                                     sections=("scalability",))
+
+        plain = SuiteRunner(_tiny_registry(), cores=CORES, store=store)
+        plain.roster()
+        sectioned = SuiteRunner(_tiny_registry(), cores=CORES, store=store,
+                                sections=("scalability",))
+        sectioned.roster()
+        assert sectioned.stats.recalled == 0  # no cross-recall
+        # and each rerun recalls only its own flavor
+        rerun = SuiteRunner(_tiny_registry(), cores=CORES, store=store,
+                            sections=("scalability",))
+        rerun.roster()
+        assert rerun.stats.recalled == 3 and rerun.stats.computed == 0
+
+    def test_sections_stable_across_recall(self, tmp_path):
+        store = ResultStore(tmp_path)
+        kw = dict(cores=CORES, store=store, sections=("energy",))
+        cold = SuiteRunner(_tiny_registry(), **kw).roster().to_csv()
+        warm = SuiteRunner(_tiny_registry(), **kw).roster().to_csv()
+        assert cold == warm
+
+    def test_cli_sections_flag(self, capsys, tmp_path):
+        from repro.suite.__main__ import main
+
+        assert main(["--refs", str(REFS), "--cores", "1,4", "--no-store",
+                     "--sections", "scalability"]) == 0
+        out = capsys.readouterr().out
+        header = out.splitlines()[1]
+        assert header.endswith("lfmr_slope,host_speedup,ndp_speedup")
+
+    def test_cli_rejects_unknown_section(self, capsys):
+        from repro.suite.__main__ import main
+
+        with pytest.raises(SystemExit):
+            main(["--sections", "nope"])
+
+
+class TestCapturedPoolFallback:
+    def test_hand_registered_captured_entry_runs_in_process(self, tmp_path):
+        """A captured entry that default_registry would NOT rebuild (a
+        hand-registered extra geometry) must be characterized in-process
+        by the pool path, alongside pool-eligible entries, with rows
+        identical to a fully sequential run."""
+        from repro.capture import captured_workloads
+        from repro.kernels.stream import capture as stream_capture
+        from repro.core.tracegen import TraceSpec, Workload
+        from repro.capture.grid import walk
+
+        def build():
+            reg = default_registry(refs=REFS)
+            keep = {"syn.stream.copy", "pal.stream.copy.1MiB"}
+            reg.entries = [e for e in reg.entries if e.name in keep]
+
+            def gen(cores, rng):
+                cap = stream_capture.capture("copy", 2**17, cores=cores)
+                return TraceSpec(walk(cap).addresses, l3_factor=1.0,
+                                 mlp=8.0, dram_rows_irregular=False)
+
+            extra = Workload(
+                name="pal.stream.copy.tiny", family="pallas-stream",
+                expected_class="1a", ai_ops_per_access=0.0,
+                instr_per_access=2.0, gen=gen)
+            reg.register(extra, domain="TPU-kernel/streaming",
+                         source="captured", op="copy", n_elems=2**17)
+            return reg
+
+        par = SuiteRunner(build(), cores=CORES, processes=2)
+        assert not par._reconstructible(
+            next(e for e in par.registry
+                 if e.name == "pal.stream.copy.tiny"))
+        rows = par.roster()
+        assert len(rows) == 3
+        seq = SuiteRunner(build(), cores=CORES)
+        assert rows.to_csv() == seq.roster().to_csv()
+        rec = next(r for r in rows.records()
+                   if r["name"] == "pal.stream.copy.tiny")
+        assert rec["assigned"] == "1a"
