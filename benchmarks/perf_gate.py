@@ -19,6 +19,11 @@ accidentally-serialized batch path).  Sections faster than
 (timer noise on a 0.0 s section is not a regression signal); sections
 present on only one side are reported but never fail the gate (new or
 renamed sections should not need a baseline edit in the same commit).
+The ``serving_warm`` section — pure content-addressed store recall of the
+serving roster — is expected to sit under the noise floor; it is gated by
+the ``--min-seconds`` floor rather than its own (near-zero) baseline, so
+only a recall path that has become genuinely slow (seconds, not
+milliseconds) trips it.
 
 The committed baseline encodes the wall-clock of the machine that
 recorded it; to keep the gate meaningful on a runner of different speed,

@@ -38,10 +38,28 @@ __all__ = [
     "derive_thresholds",
     "validate",
     "CLASSES",
+    "MITIGATIONS",
     "CORE_SWEEP",  # re-exported from repro.core.sweep
 ]
 
 CLASSES = ("1a", "1b", "1c", "2a", "2b", "2c")
+
+# class -> the data-movement mitigation the paper's §5 case studies match
+# to it: 1a/1c are DRAM-bandwidth / LLC-pressure bound and want NDP; 1b is
+# latency-bound with cacheable reuse and wants the deeper prefetch+NUCA
+# toolbox; 2a thrashes the shared LLC as cores scale (NUCA/partitioning);
+# 2b/2c are compute-friendly and need no data-movement mitigation.  The
+# serving roster reports these per traffic shape, and the per-window phase
+# timelines (repro.serving.phases) show the recommendation *flipping* with
+# the traffic phase — the motivating observation for that subsystem.
+MITIGATIONS = {
+    "1a": "ndp",
+    "1b": "prefetch+nuca",
+    "1c": "ndp",
+    "2a": "nuca",
+    "2b": "none",
+    "2c": "none",
+}
 
 
 @dataclass(frozen=True)

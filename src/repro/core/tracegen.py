@@ -38,6 +38,14 @@ Families (expected bottleneck class in parentheses):
 The windowed temporal-locality metric (Eq. 2) weighs an address reused N
 times by 2^floor(log2 N), so reuse runs of length 2^k + 1 maximize the
 score; run lengths below are chosen with that quantization in mind.
+
+These seven families are the *synthetic* half of the roster only.  The
+serving-traffic families (``zipfian`` / ``hotspot`` / ``bursty`` /
+``sequential`` / ``diurnal`` request processes composed with captured
+kernel geometries) live in :mod:`repro.serving.traffic` — they are traffic
+*shapes* over real kernels, not standalone address generators, so they are
+registered under the ``serving`` roster source rather than in
+:data:`FAMILIES`.  Both use the same :func:`stable_name_seed` convention.
 """
 
 from __future__ import annotations
@@ -50,18 +58,25 @@ import numpy as np
 
 from .cachesim import WORDS_PER_LINE
 
-__all__ = ["TraceSpec", "Workload", "make_suite", "FAMILIES", "DEFAULT_REFS"]
+__all__ = ["TraceSpec", "Workload", "make_suite", "FAMILIES", "DEFAULT_REFS",
+           "stable_name_seed"]
 
 
-def _stable_name_seed(name: str) -> int:
+def stable_name_seed(name: str) -> int:
     """Deterministic per-workload RNG offset.
 
     Built on ``zlib.crc32`` rather than builtin ``hash()``: string hashing
     is salted per interpreter run (PYTHONHASHSEED), so a ``hash()``-derived
     seed would silently change every trace — and every downstream metric —
     from one run to the next.  See ``tests/test_tracegen_seeding.py``.
+    Shared by the synthetic families here and the serving-traffic
+    processes in :mod:`repro.serving.traffic`.
     """
     return zlib.crc32(name.encode("utf-8")) % 7919
+
+
+# Back-compat alias (pre-serving name; external callers may hold it).
+_stable_name_seed = stable_name_seed
 
 
 @dataclass
@@ -85,7 +100,7 @@ class Workload:
 
     def trace(self, cores: int, seed: int = 0) -> TraceSpec:
         return self.gen(
-            cores, np.random.default_rng(seed + _stable_name_seed(self.name))
+            cores, np.random.default_rng(seed + stable_name_seed(self.name))
         )
 
 

@@ -35,11 +35,27 @@ def dispatch_flops(*, n_tokens: int, d: int, f: int) -> float:
 
 
 def capture(*, n_tokens: int, d: int, f: int, n_experts: int,
-            rng: np.random.Generator, path: str = "auto") -> GridCapture:
-    """Per-thread geometry: dispatch ``n_tokens`` over ``n_experts``."""
+            rng: np.random.Generator, expert_ids: np.ndarray | None = None,
+            path: str = "auto") -> GridCapture:
+    """Per-thread geometry: dispatch ``n_tokens`` over ``n_experts``.
+
+    ``expert_ids`` overrides the rng assignment draw with an explicit
+    per-token expert list (the serving scenarios feed traffic-shaped
+    routing through here); the hook still sorts it (the kernel contract)
+    and still draws the token permutation from ``rng``.
+    """
     if d % 128 or f % 128:
         raise ValueError(f"d {d} / f {f} must be multiples of 128 (lanes)")
-    eid = np.sort(rng.integers(0, n_experts, size=n_tokens, dtype=np.int64))
+    if expert_ids is not None:
+        eid = np.asarray(expert_ids, dtype=np.int64)
+        if eid.ndim != 1 or eid.size != n_tokens:
+            raise ValueError(f"expert_ids must be [{n_tokens}] (n_tokens), "
+                             f"got shape {eid.shape}")
+        if eid.size and (eid.min() < 0 or eid.max() >= n_experts):
+            raise ValueError(f"expert_ids entries must be in [0, {n_experts})")
+        eid = np.sort(eid)
+    else:
+        eid = np.sort(rng.integers(0, n_experts, size=n_tokens, dtype=np.int64))
     # Token order: the sorted permutation of a thread-private batch.  The
     # permutation (not arange) matters: the x-gather and y-scatter rows
     # must be irregular the way a real routed batch is.

@@ -35,13 +35,31 @@ def decode_flops(*, h: int, page: int, d: int, n_active: int) -> float:
 
 
 def capture(*, n_pages: int, page: int, d: int, h: int, n_active: int,
-            rng: np.random.Generator, path: str = "auto") -> GridCapture:
-    """Per-thread geometry: one sequence's decode step over the pool."""
+            rng: np.random.Generator | None = None,
+            page_table: np.ndarray | None = None,
+            path: str = "auto") -> GridCapture:
+    """Per-thread geometry: one sequence's decode step over the pool.
+
+    ``page_table`` overrides the rng draw with an explicit page list (the
+    serving scenarios feed traffic-shaped tables through here).  Unlike
+    the rng draw it may repeat pages — a prefix cache maps many sequences
+    onto shared prefix pages — but every entry must index into the pool.
+    """
     if d % 128:
         raise ValueError(f"d {d} must be a multiple of 128 (lane dim)")
     if n_active > n_pages:
         raise ValueError(f"n_active {n_active} exceeds pool size {n_pages}")
-    pt = rng.choice(n_pages, size=n_active, replace=False).astype(np.int64)
+    if page_table is not None:
+        pt = np.asarray(page_table, dtype=np.int64)
+        if pt.ndim != 1 or pt.size != n_active:
+            raise ValueError(f"page_table must be [{n_active}] (n_active), "
+                             f"got shape {pt.shape}")
+        if pt.size and (pt.min() < 0 or pt.max() >= n_pages):
+            raise ValueError(f"page_table entries must be in [0, {n_pages})")
+    elif rng is None:
+        raise ValueError("capture needs either rng or page_table")
+    else:
+        pt = rng.choice(n_pages, size=n_active, replace=False).astype(np.int64)
     flops = decode_flops(h=h, page=page, d=d, n_active=n_active)
     if capture_path(path) == "jaxpr":
         return memoized(

@@ -1,0 +1,39 @@
+"""``repro.serving`` — production-traffic trace families over captured
+kernels, with phase-aware DAMOV classification.
+
+The subsystem models a serving fleet as a first-class trace source:
+
+- :mod:`repro.serving.traffic` — request-arrival / key-popularity
+  processes (uniform, Zipfian, hotspot, bursty, sequential, diurnal);
+- :mod:`repro.serving.scenario` — traffic x captured kernel geometry
+  (paged-KV decode, MoE dispatch, flash attention) composed through a
+  continuous-batching schedule into per-window HBM traces;
+- :mod:`repro.serving.phases` — a DAMOV class verdict per window: the
+  phase timeline, transition matrix and dominant phase next to the
+  whole-trace label.
+
+``python -m repro.serving`` prints one scenario's phase timeline;
+``python -m repro.suite --sections serving`` characterizes the whole
+scenario roster.
+"""
+
+from .phases import MITIGATIONS, PhaseTimeline, measure_windows
+from .scenario import (SCENARIOS, ServingScenario, WindowTrace,
+                       serving_workloads, window_seed)
+from .traffic import (TRAFFIC_FAMILIES, TrafficProcess, WindowDemand,
+                      make_traffic)
+
+__all__ = [
+    "TRAFFIC_FAMILIES",
+    "TrafficProcess",
+    "WindowDemand",
+    "make_traffic",
+    "SCENARIOS",
+    "ServingScenario",
+    "WindowTrace",
+    "serving_workloads",
+    "window_seed",
+    "MITIGATIONS",
+    "PhaseTimeline",
+    "measure_windows",
+]

@@ -13,6 +13,8 @@ from .registry import (  # noqa: F401
     SuiteEntry,
     SuiteRegistry,
     default_registry,
+    registry_for,
+    serving_registry,
 )
 from .runner import (  # noqa: F401
     ROSTER_COLUMNS,
@@ -25,6 +27,8 @@ __all__ = [
     "SuiteEntry",
     "SuiteRegistry",
     "default_registry",
+    "serving_registry",
+    "registry_for",
     "SuiteRunner",
     "ResultStore",
     "default_store_root",

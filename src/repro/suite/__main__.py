@@ -22,6 +22,10 @@ Examples::
     # per-entry scalability + energy columns appended to every roster row
     python -m repro.suite --fast --sections scalability,energy
 
+    # the serving roster: production-traffic scenarios with phase
+    # timelines and best-mitigation columns (repro.serving)
+    python -m repro.suite --sections serving --fast --check
+
     # prune store records from old schema versions
     python -m repro.suite --gc
 """
@@ -36,7 +40,7 @@ from repro.core.sweep import CORE_SWEEP
 from repro.core.tracegen import DEFAULT_REFS
 from repro.study.cliutil import emit_tables, parse_cores
 
-from .registry import default_registry
+from .registry import registry_for
 from .runner import SECTION_COLUMNS, SuiteRunner
 from .store import ResultStore, default_store_root
 
@@ -123,16 +127,18 @@ def main(argv: list[str] | None = None) -> int:
               f"{len(store)} kept in {store.root}", file=sys.stderr)
         return 0
 
-    registry = default_registry(refs=refs)
+    registry = registry_for(refs=refs, sections=args.sections)
 
     if args.list:
         for e in registry:
             params = ", ".join(f"{k}={v}" for k, v in e.params)
             print(f"{e.name:28s} {e.source:9s} {e.domain:24s} "
                   f"expected={e.expected_class}  [{params}]")
-        print(f"# {len(registry)} entries "
-              f"({len(registry.by_source('synthetic'))} synthetic, "
-              f"{len(registry.by_source('captured'))} captured)")
+        split = ", ".join(
+            f"{len(registry.by_source(s))} {s}"
+            for s in ("synthetic", "captured", "serving")
+            if registry.by_source(s))
+        print(f"# {len(registry)} entries ({split})")
         return 0
 
     store = None if args.no_store else ResultStore(args.store)
@@ -147,10 +153,11 @@ def main(argv: list[str] | None = None) -> int:
               f"engine: {runner.study.stats.as_dict()}", file=sys.stderr)
 
     if args.check:
-        bad = runner.divergent(source="captured")
+        bad = [rec for source in ("captured", "serving")
+               for rec in runner.divergent(source=source)]
         if bad:
             for rec in bad:
-                print(f"# DIVERGENT captured entry {rec['name']}: "
+                print(f"# DIVERGENT {rec['source']} entry {rec['name']}: "
                       f"assigned {rec['assigned']} != expected "
                       f"{rec['expected']}", file=sys.stderr)
             return 2

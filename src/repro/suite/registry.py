@@ -48,7 +48,8 @@ from repro.core import tracegen
 from repro.core.tracegen import Workload
 
 __all__ = ["SuiteEntry", "SuiteRegistry", "default_registry",
-           "SUITE_SCHEMA", "LEGACY_SCHEMA"]
+           "serving_registry", "registry_for", "SUITE_SCHEMA",
+           "LEGACY_SCHEMA"]
 
 # Bumped whenever capture geometry or roster methodology changes in a way
 # that invalidates stored results.
@@ -69,12 +70,12 @@ class SuiteEntry:
 
     workload: Workload
     domain: str
-    source: str                              # "synthetic" | "captured"
+    source: str                     # "synthetic" | "captured" | "serving"
     params: tuple[tuple[str, object], ...]   # sorted (key, value) pairs
 
     def __post_init__(self) -> None:
-        if self.source not in ("synthetic", "captured"):
-            raise ValueError(f"source must be synthetic|captured, "
+        if self.source not in ("synthetic", "captured", "serving"):
+            raise ValueError(f"source must be synthetic|captured|serving, "
                              f"got {self.source!r}")
 
     @property
@@ -235,3 +236,33 @@ def default_registry(*, refs: int | None = None) -> SuiteRegistry:
         reg.register(w, domain=spec.domain, source="captured",
                      **spec.params())
     return reg
+
+
+def serving_registry(*, refs: int | None = None) -> SuiteRegistry:
+    """The serving roster: one entry per registered traffic scenario.
+
+    Serving traces are window-composed from captured kernel geometries
+    (``n_windows x window_refs`` per entry) and do **not** scale with
+    ``refs`` — the marker is carried only so a process-pool worker can
+    rebuild this registry via :func:`registry_for`, exactly like the
+    default roster's reconstruction contract.
+    """
+    from repro.serving.scenario import SCENARIOS, serving_workloads
+
+    refs = tracegen.DEFAULT_REFS if refs is None else refs
+    reg = SuiteRegistry(refs=refs)
+    for scen, w in zip(SCENARIOS.values(), serving_workloads()):
+        reg.register(w, domain=f"serving/{scen.kernel}", source="serving",
+                     **scen.params())
+    return reg
+
+
+def registry_for(*, refs: int | None = None,
+                 sections: tuple[str, ...] = ()) -> SuiteRegistry:
+    """The registry a roster request resolves to: the serving roster when
+    the ``serving`` section is requested, the default roster otherwise.
+    Both the CLI and the process-pool workers route through here, so a
+    fanned-out serving entry reconstructs in its worker."""
+    if "serving" in sections:
+        return serving_registry(refs=refs)
+    return default_registry(refs=refs)

@@ -13,7 +13,13 @@ Optional roster sections (``sections=("scalability", "energy")`` /
 ``--sections``) append per-entry scalability and energy columns computed
 from the same memoized engine cells; sectioned rows are stored under
 section-specific record keys so plain and sectioned rosters never recall
-each other's rows.
+each other's rows.  The ``serving`` section swaps the roster itself: the
+registry resolves through :func:`~repro.suite.registry.registry_for` to
+the production-traffic scenarios of :mod:`repro.serving`, and the section
+columns add each scenario's phase timeline
+(:func:`repro.serving.phases.measure_windows` on the shared engine) plus
+the best data-movement mitigation measured across the host+pf / NUCA /
+NDP substrates.
 
 Entry-level process fan-out: with ``processes > 1`` the runner
 characterizes whole entries — not just core-sweep cells — across a
@@ -55,10 +61,22 @@ ROSTER_COLUMNS = (
 # ``scalability``: host strong-scaling speedup and the NDP-vs-host speedup
 # at the sweep's top core count (paper Figs. 5/16).  ``energy``: per-thread
 # host and NDP energy at the top core count plus their ratio (Figs. 7-17).
+# ``serving``: phase structure (window count, distinct phases, dominant
+# phase, the full per-window class timeline) and the best-performing
+# data-movement mitigation with its speedup over the plain host at the
+# sweep's top core count; requesting it also swaps the roster to the
+# repro.serving scenarios (see registry_for).
 SECTION_COLUMNS: dict[str, tuple[str, ...]] = {
     "scalability": ("host_speedup", "ndp_speedup"),
     "energy": ("host_mj", "ndp_mj", "ndp_energy_ratio"),
+    "serving": ("windows", "phases", "dominant_phase", "phase_timeline",
+                "best_mitigation", "best_speedup"),
 }
+
+# A mitigation must beat the plain host by this factor before the roster
+# recommends it; below the bar the row reports "none" (matching the
+# MITIGATIONS entries for the compute-friendly classes).
+_MITIGATION_BAR = 1.05
 CLASSES = classify.CLASSES
 
 
@@ -75,11 +93,14 @@ class RunStats:
 def _worker_runner(refs: int, seed: int, cores: tuple[int, ...],
                    backend: str,
                    sections: tuple[str, ...]) -> "SuiteRunner":
-    """Per-process runner over a rebuilt default registry (fork/spawn-safe:
-    constructed on first task, reused for every entry the worker gets)."""
-    from .registry import default_registry
+    """Per-process runner over a rebuilt registry (fork/spawn-safe:
+    constructed on first task, reused for every entry the worker gets).
+    ``registry_for`` resolves the same roster the parent ran — the serving
+    scenarios when the serving section is on, the default roster else."""
+    from .registry import registry_for
 
-    return SuiteRunner(default_registry(refs=refs), seed=seed, cores=cores,
+    return SuiteRunner(registry_for(refs=refs, sections=sections),
+                       seed=seed, cores=cores,
                        backend=backend, store=None, sections=sections)
 
 
@@ -149,6 +170,8 @@ class SuiteRunner:
 
     def _section_values(self, section: str, entry: SuiteEntry) -> tuple:
         """Extra per-entry columns, from the same memoized engine cells."""
+        if section == "serving":
+            return self._serving_values(entry)
         r = self.study.scalability(entry.workload)
         host = r.points["host"]
         ndp = r.points["ndp"]
@@ -162,6 +185,43 @@ class SuiteRunner:
         ndp_mj = round(ndp[-1].energy.total_j * 1e3, 6)
         return (host_mj, ndp_mj,
                 round(ndp_mj / host_mj if host_mj else 0.0, 3))
+
+    def _serving_values(self, entry: SuiteEntry) -> tuple:
+        """Phase timeline + best measured mitigation for a serving entry.
+
+        Non-serving entries (the section can ride on the default roster
+        too) skip the window pass — they have no scheduling windows — and
+        report placeholder phase columns next to a real best-mitigation
+        measurement.
+        """
+        if entry.source == "serving":
+            from repro.serving.phases import measure_windows
+
+            tl = measure_windows(entry.name, seed=self.seed,
+                                 cores=self.cores, engine=self.study.engine)
+            phase_cols = (len(tl.labels), tl.n_phases, tl.dominant,
+                          tl.timeline())
+        else:
+            phase_cols = (0, 0, "-", "-")
+        return phase_cols + self._best_mitigation(entry)
+
+    def _best_mitigation(self, entry: SuiteEntry) -> tuple:
+        """(name, speedup) of the best substrate vs the plain host at the
+        sweep's top core count: NDP, prefetch+NUCA host, or NUCA alone —
+        the three §5 mitigation levers — gated on :data:`_MITIGATION_BAR`.
+        """
+        plain = self.study.scalability(entry.workload)
+        tuned = self.study.scalability(entry.workload, nuca=True)
+        base = plain.points["host"][-1].perf
+        candidates = {
+            "ndp": plain.points["ndp"][-1].perf / base,
+            "prefetch+nuca": tuned.points["host+pf"][-1].perf / base,
+            "nuca": tuned.points["host"][-1].perf / base,
+        }
+        best = max(candidates, key=lambda k: candidates[k])
+        if candidates[best] < _MITIGATION_BAR:
+            return ("none", 1.0)
+        return (best, round(candidates[best], 3))
 
     def _fingerprint(self, entry: SuiteEntry) -> str:
         return entry.fingerprint(seed=self.seed, cores=self.cores,
@@ -235,7 +295,7 @@ class SuiteRunner:
         if self.registry.refs is None:
             raise ValueError(
                 "process fan-out needs a registry reconstructible from "
-                "default_registry(refs=...); this registry has no refs "
+                "registry_for(refs=...); this registry has no refs "
                 "marker — run with processes=1"
             )
         remote, local = [], []
@@ -280,10 +340,11 @@ class SuiteRunner:
 
     def _rebuilt_default(self) -> dict[str, SuiteEntry]:
         if self._rebuilt is None:
-            from .registry import default_registry
+            from .registry import registry_for
             self._rebuilt = {
                 e.name: e
-                for e in default_registry(refs=self.registry.refs)
+                for e in registry_for(refs=self.registry.refs,
+                                      sections=self.sections)
             }
         return self._rebuilt
 
@@ -297,21 +358,28 @@ class SuiteRunner:
         return res
 
     def histogram(self) -> StudyResult:
-        """Per-class entry counts, split by source (Fig. 2-style census)."""
+        """Per-class entry counts, split by source (Fig. 2-style census).
+
+        Columns follow the registry's sources in canonical order (the
+        default roster keeps its synthetic/captured split; the serving
+        roster gets a serving column instead).
+        """
         roster = self.roster()
+        present = {e.source for e in self.registry}
+        sources = tuple(
+            s for s in ("synthetic", "captured", "serving") if s in present
+        ) or ("synthetic", "captured")
         counts: dict[str, dict[str, int]] = {
-            c: {"synthetic": 0, "captured": 0} for c in CLASSES
+            c: dict.fromkeys(sources, 0) for c in CLASSES
         }
         for rec in roster.records():
-            counts.setdefault(rec["assigned"],
-                              {"synthetic": 0, "captured": 0})
+            counts.setdefault(rec["assigned"], dict.fromkeys(sources, 0))
             counts[rec["assigned"]][rec["source"]] += 1
-        res = StudyResult("class_histogram",
-                          ("class", "synthetic", "captured", "total"))
+        res = StudyResult("class_histogram", ("class",) + sources + ("total",))
         for cls in sorted(counts):
-            s, c = counts[cls]["synthetic"], counts[cls]["captured"]
-            if cls in CLASSES or s or c:
-                res.append((cls, s, c, s + c))
+            vals = tuple(counts[cls][s] for s in sources)
+            if cls in CLASSES or any(vals):
+                res.append((cls,) + vals + (sum(vals),))
         return res
 
     def divergent(self, *, source: str = "captured") -> list[dict]:

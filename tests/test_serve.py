@@ -1,0 +1,142 @@
+"""Continuous-batching engine invariants (``repro.serve.engine``).
+
+The engine is exercised with a stub LM whose next-token function is the
+deterministic successor ``(t + 1) % V`` — every request's output stream is
+fully predictable, so admission, slot reuse, bucket padding, EOS and
+token-budget retirement can be asserted exactly without compiling a real
+model.  The stub honours the engine's LM contract: ``init_cache`` /
+``cache_axes`` (a pytree of logical-axis tuples containing ``"batch"``),
+single-slot ``prefill`` with a ``prompt_len`` mask, and a batched
+``decode_step`` over the full slot pool.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve.engine import Engine, Request
+
+V = 16  # stub vocab
+
+
+class SuccessorLM:
+    """Next token = (current + 1) % V; prefill masks right-padding."""
+
+    def init_cache(self, batch, max_len):
+        return {"k": jnp.zeros((batch, max_len), jnp.float32)}
+
+    def cache_axes(self):
+        return {"k": ("batch", None)}
+
+    def prefill(self, params, tokens, cache_slice, *, prompt_len):
+        del params
+        # last *valid* token — bucket padding must be invisible
+        last = tokens[0, prompt_len[0] - 1]
+        logits = jax.nn.one_hot((last + 1) % V, V)[None, None, :]
+        # stamp the slot so slot reuse is observable from outside
+        new_c = {"k": cache_slice["k"].at[:, 0].set(
+            jnp.sum(tokens[0, : tokens.shape[1]]
+                    * (jnp.arange(tokens.shape[1]) < prompt_len[0])).astype(
+                        jnp.float32))}
+        return logits, new_c, prompt_len
+    def decode_step(self, params, tokens, cache, pos):
+        del params, pos
+        nxt = (tokens[:, 0] + 1) % V
+        return jax.nn.one_hot(nxt, V)[:, None, :], cache
+
+
+def make_engine(max_batch=2, max_len=64, buckets=(8, 32)):
+    return Engine(SuccessorLM(), params={}, max_batch=max_batch,
+                  max_len=max_len, prompt_buckets=buckets)
+
+
+def req(rid, prompt, **kw):
+    return Request(rid=rid, prompt=np.asarray(prompt, np.int32), **kw)
+
+
+class TestBuckets:
+    def test_rounds_up_to_smallest_fitting_bucket(self):
+        eng = make_engine(buckets=(8, 32, 128))
+        assert eng._bucket(1) == 8
+        assert eng._bucket(8) == 8
+        assert eng._bucket(9) == 32
+        assert eng._bucket(33) == 128
+
+    def test_oversized_prompt_falls_to_last_bucket(self):
+        eng = make_engine(buckets=(8, 32))
+        assert eng._bucket(500) == 32
+
+    def test_one_compile_per_bucket_not_per_length(self):
+        eng = make_engine(max_batch=4, buckets=(8, 32))
+        for rid, n in enumerate((3, 5, 7, 20)):  # 3 in bucket 8, 1 in 32
+            eng.submit(req(rid, list(range(1, n + 1)), max_new_tokens=1))
+        eng.step()
+        assert set(eng._prefills) == {8, 32}
+
+    def test_padding_is_masked_by_prompt_len(self):
+        # same last-valid-token, different padding tails -> same chain
+        eng = make_engine()
+        out = eng.run([req(0, [4], max_new_tokens=2),
+                       req(1, [9, 2, 4], max_new_tokens=2)])
+        assert out[0] == [5, 6] and out[1] == [5, 6]
+
+
+class TestDecode:
+    def test_successor_chain_prefill_plus_decode(self):
+        eng = make_engine()
+        out = eng.run([req(0, [3, 5], max_new_tokens=4)])
+        # prefill emits 6, three decode steps continue the chain
+        assert out[0] == [6, 7, 8, 9]
+
+    def test_concurrent_slots_do_not_cross_talk(self):
+        eng = make_engine(max_batch=2)
+        out = eng.run([req(0, [1], max_new_tokens=3),
+                       req(1, [10], max_new_tokens=3)])
+        assert out[0] == [2, 3, 4]
+        assert out[1] == [11, 12, 13]
+
+    def test_step_reports_rid_token_pairs(self):
+        eng = make_engine()
+        eng.submit(req(7, [1], max_new_tokens=2))
+        emitted = eng.step()   # admit (prefill -> 2) + one decode (-> 3)
+        assert emitted == [(7, 3)]
+
+
+class TestRetirement:
+    def test_eos_frees_slot_early(self):
+        eng = make_engine()
+        out = eng.run([req(0, [1], max_new_tokens=10, eos_id=4)])
+        assert out[0] == [2, 3, 4]
+        assert not eng.active and len(eng._free) == eng.max_batch
+
+    def test_max_len_caps_generation(self):
+        eng = make_engine(max_len=6)
+        out = eng.run([req(0, [1, 2], max_new_tokens=50)])
+        # pos: 2 after prefill, retire once pos reaches max_len - 1
+        assert len(out[0]) == 4
+        assert not eng.active
+
+    def test_slots_are_reused_across_waves(self):
+        eng = make_engine(max_batch=2)
+        out = eng.run([req(i, [i + 1], max_new_tokens=2) for i in range(4)])
+        assert all(len(v) == 2 for v in out.values())
+        assert out[3] == [5, 6]
+        assert sorted(eng._free) == [0, 1] and not eng.active and not eng.queue
+
+    def test_admission_is_fifo_slots_lifo(self):
+        eng = make_engine(max_batch=2)
+        eng.submit(req(0, [1], max_new_tokens=5))
+        eng.submit(req(1, [2], max_new_tokens=5))
+        eng.submit(req(2, [3], max_new_tokens=5))
+        eng._admit()
+        # first queued request got the top of the free stack (slot 1)
+        assert eng.active[1].rid == 0 and eng.active[0].rid == 1
+        assert eng.queue[0].rid == 2 and not eng._free
+
+    def test_prefill_stamps_the_slot_cache(self):
+        eng = make_engine(max_batch=2)
+        eng.submit(req(0, [2, 3, 4], max_new_tokens=1))
+        eng._admit()
+        (slot,) = eng.active
+        assert float(eng.cache["k"][slot, 0]) == 9.0

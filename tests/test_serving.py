@@ -1,0 +1,390 @@
+"""Tests for the serving subsystem (repro.serving).
+
+Traffic-process invariants (family roster, determinism per (name, seed),
+per-family demand shapes), the capture-hook payload overrides the
+scenarios ride on, window composition (fixed-ref windows, whole-trace /
+window-seed consistency, memoization), phase timelines, and the serving
+roster's suite integration (registry_for, serving section columns, CLI).
+Full-sweep classification of the complete roster is covered by the
+--sections serving CI smoke; here reduced core sweeps keep things fast.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import tracegen
+from repro.core.classify import MITIGATIONS
+from repro.kernels.moe_dispatch import capture as moe_capture
+from repro.kernels.paged_kv_decode import capture as paged_capture
+from repro.serving import (
+    SCENARIOS,
+    TRAFFIC_FAMILIES,
+    PhaseTimeline,
+    ServingScenario,
+    make_traffic,
+    measure_windows,
+    serving_workloads,
+    window_seed,
+)
+from repro.serving.scenario import _window_traces
+from repro.suite import SuiteRunner, registry_for, serving_registry
+from repro.suite.runner import SECTION_COLUMNS
+
+CORES = (1, 4)
+
+
+# --------------------------------------------------------------------------
+# Traffic processes
+# --------------------------------------------------------------------------
+class TestTraffic:
+    def test_family_roster_is_total(self):
+        from repro.serving.traffic import _GENERATORS
+
+        assert set(_GENERATORS) == set(TRAFFIC_FAMILIES)
+
+    @pytest.mark.parametrize("family", sorted(TRAFFIC_FAMILIES))
+    def test_windows_shape_and_determinism(self, family):
+        p = make_traffic(family, keyspace=256, rate=4)
+        a = p.windows(6, 32, seed=3)
+        b = p.windows(6, 32, seed=3)
+        assert len(a) == 6
+        for wa, wb in zip(a, b):
+            assert wa.step == wb.step
+            assert wa.arrivals == wb.arrivals >= 1
+            assert 0.0 < wa.intensity <= 1.0
+            assert wa.keys.dtype == np.int64 and wa.keys.size == 32
+            assert ((0 <= wa.keys) & (wa.keys < 256)).all()
+            assert (wa.keys == wb.keys).all()
+
+    def test_seed_and_name_move_the_draws(self):
+        p = make_traffic("zipfian", keyspace=512, rate=4, alpha=1.1)
+        q = make_traffic("zipfian", keyspace=512, rate=4, alpha=1.2)
+        base = p.windows(4, 64, seed=0)
+        assert any(
+            (wa.keys != wb.keys).any()
+            for wa, wb in zip(base, p.windows(4, 64, seed=1)))
+        assert any(   # name folds params -> different seed offset
+            (wa.keys != wb.keys).any()
+            for wa, wb in zip(base, q.windows(4, 64, seed=0)))
+
+    def test_canonical_names(self):
+        assert make_traffic("uniform", keyspace=8, rate=1).name == "uniform"
+        assert make_traffic("zipfian", keyspace=8, rate=1,
+                            alpha=1.4).name == "zipfian(alpha=1.4)"
+        assert make_traffic("bursty", keyspace=8, rate=1,
+                            name="pinned").name == "pinned"
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="unknown traffic family"):
+            make_traffic("sawtooth", keyspace=8, rate=1)
+        with pytest.raises(ValueError, match="must be >= 1"):
+            make_traffic("uniform", keyspace=0, rate=1)
+        with pytest.raises(ValueError, match="must be >= 1"):
+            make_traffic("uniform", keyspace=8, rate=0)
+
+    def test_sequential_is_a_contiguous_scan(self):
+        p = make_traffic("sequential", keyspace=100, rate=2)
+        wins = p.windows(3, 40, seed=9)
+        assert (wins[0].keys == np.arange(40)).all()
+        assert wins[1].keys[0] == 40 and wins[2].keys[0] == 80 % 100
+        # seed-independent by design
+        assert (wins[0].keys == p.windows(3, 40, seed=5)[0].keys).all()
+
+    def test_bursty_alternates_between_two_levels(self):
+        p = make_traffic("bursty", keyspace=1024, rate=8)
+        wins = p.windows(32, 64, seed=0)
+        levels = {w.intensity for w in wins}
+        assert levels == {1.0, 0.125}
+        hot_n = max(1, round(1024 / 64))
+        for w in wins:
+            if w.intensity < 1.0:   # lull traffic stays on the hot set
+                assert w.arrivals == 1 and (w.keys < hot_n).all()
+            else:
+                assert w.arrivals == 8
+
+    def test_diurnal_intensity_tracks_the_sinusoid(self):
+        p = make_traffic("diurnal", keyspace=1024, rate=8, floor=0.2,
+                         period=8.0)
+        wins = p.windows(9, 64, seed=0)
+        xs = [w.intensity for w in wins]
+        assert xs[0] == pytest.approx(0.2)       # trough at the floor
+        assert xs[4] == pytest.approx(1.0)       # crest at half-period
+        assert xs[8] == pytest.approx(0.2)       # full period closes
+        assert all(0.2 <= x <= 1.0 for x in xs)
+
+    def test_hotspot_concentrates_on_the_hot_set(self):
+        p = make_traffic("hotspot", keyspace=1000, rate=4, hot_frac=0.01,
+                         hot_prob=0.95)
+        keys = np.concatenate([w.keys for w in p.windows(8, 256, seed=0)])
+        assert (keys < 10).mean() > 0.9
+
+    def test_zipf_head_is_heavier_than_uniform(self):
+        z = make_traffic("zipfian", keyspace=512, rate=4, alpha=1.4)
+        u = make_traffic("uniform", keyspace=512, rate=4)
+        zk = np.concatenate([w.keys for w in z.windows(4, 512, seed=0)])
+        uk = np.concatenate([w.keys for w in u.windows(4, 512, seed=0)])
+        assert (zk < 8).mean() > 5 * (uk < 8).mean()
+
+
+# --------------------------------------------------------------------------
+# Capture-hook payload overrides (the scenarios' transport into the
+# kernels' existing launch geometry)
+# --------------------------------------------------------------------------
+class TestCaptureOverrides:
+    def _paged(self, table):
+        from repro.capture.grid import walk
+
+        return walk(paged_capture.capture(
+            n_pages=64, page=4, d=128, h=1, n_active=4,
+            page_table=np.asarray(table, np.int64), path="mirror"))
+
+    def test_pagedkv_page_table_override_drives_the_stream(self):
+        a = self._paged([5, 9, 2, 40])
+        b = self._paged([5, 9, 2, 40])
+        c = self._paged([6, 9, 2, 40])
+        assert (a.addresses == b.addresses).all()
+        assert (a.addresses != c.addresses).any()
+
+    def test_pagedkv_duplicate_pages_model_prefix_sharing(self):
+        # the walker fetches an input block only when its index-map output
+        # changes, so repeated page-table entries (shared prefixes) collapse
+        cold = self._paged([1, 2, 3, 4])
+        shared = self._paged([7, 7, 7, 7])
+        assert shared.loads < cold.loads
+
+    def test_pagedkv_page_table_validation(self):
+        ok = dict(n_pages=64, page=4, d=128, h=1, n_active=4, path="mirror")
+        with pytest.raises(ValueError, match="rng or page_table"):
+            paged_capture.capture(**ok)
+        with pytest.raises(ValueError, match="must be"):
+            paged_capture.capture(**ok, page_table=np.array([1, 2]))
+        with pytest.raises(ValueError, match="in \\[0, 64\\)"):
+            paged_capture.capture(**ok, page_table=np.array([1, 2, 3, 99]))
+
+    def _moe(self, ids):
+        from repro.capture.grid import walk
+
+        return walk(moe_capture.capture(
+            n_tokens=4, d=128, f=128, n_experts=8,
+            rng=np.random.default_rng(0),
+            expert_ids=np.asarray(ids, np.int64), path="mirror"))
+
+    def test_moe_expert_ids_override_is_sorted_in(self):
+        # the hook sorts the routing (kernel contract): any permutation of
+        # the same assignment multiset yields an identical stream
+        a = self._moe([7, 3, 3, 1])
+        b = self._moe([1, 3, 3, 7])
+        c = self._moe([0, 3, 3, 7])
+        assert (a.addresses == b.addresses).all()
+        assert (a.addresses != c.addresses).any()
+
+    def test_moe_expert_ids_validation(self):
+        with pytest.raises(ValueError, match="in \\[0, 8\\)"):
+            moe_capture.capture(n_tokens=4, d=128, f=128, n_experts=8,
+                                rng=np.random.default_rng(0),
+                                expert_ids=np.array([0, 1, 2, 8]),
+                                path="mirror")
+        with pytest.raises(ValueError, match="must be"):
+            moe_capture.capture(n_tokens=4, d=128, f=128, n_experts=8,
+                                rng=np.random.default_rng(0),
+                                expert_ids=np.array([[0, 1], [2, 3]]),
+                                path="mirror")
+
+
+# --------------------------------------------------------------------------
+# Scenario composition
+# --------------------------------------------------------------------------
+def _small_scenario(name="srv.test.small", family="bursty", kernel="pagedkv",
+                    expected="1a", **traffic_params):
+    geo = (("d", 128), ("h", 1), ("n_pages", 1024), ("occupancy", 1.0),
+           ("page", 4), ("pages_per_seq", 4))
+    return ServingScenario(
+        name=name, kernel=kernel,
+        traffic=make_traffic(family, keyspace=1024, rate=4, name=f"t-{name}",
+                             **traffic_params),
+        expected_class=expected, geometry=geo, n_windows=4,
+        window_refs=2048, max_batch=4, decode_steps=1)
+
+
+class TestScenario:
+    def test_roster_shape(self):
+        assert len(SCENARIOS) >= 15
+        kernels = {s.kernel for s in SCENARIOS.values()}
+        assert kernels == {"pagedkv", "moe", "flashattn"}
+        ws = serving_workloads()
+        assert len(ws) == len(SCENARIOS)
+        assert len({w.name for w in ws}) == len(ws)
+        # >= 2 traffic shapes over the same kernel with different expected
+        # classes — the tentpole's class-flip criterion, pinned structurally
+        for kernel in ("pagedkv", "moe"):
+            classes = {s.expected_class for s in SCENARIOS.values()
+                       if s.kernel == kernel}
+            assert len(classes) >= 2, kernel
+
+    def test_window_traces_are_fixed_ref_and_deterministic(self):
+        scen = _small_scenario()
+        a = scen.window_traces(seed=0)
+        assert len(a) == scen.n_windows
+        for wt in a:
+            assert wt.addresses.size == scen.window_refs
+            assert wt.raw_refs > 0 and wt.batch >= 1
+            assert wt.ai > 0
+        b = scen.window_traces(seed=0)
+        assert all((x.addresses == y.addresses).all() for x, y in zip(a, b))
+        c = _window_traces(scen, window_seed(scen.name, 1))
+        assert any((x.addresses != y.addresses).any()
+                   for x, y in zip(a, c))
+
+    def test_window_composition_is_memoized(self):
+        scen = _small_scenario(name="srv.test.memo")
+        assert scen.window_traces(seed=0) is scen.window_traces(seed=0)
+
+    def test_workload_trace_is_the_window_concatenation(self):
+        # Workload.trace's first rng draw == window_seed(name, seed), so
+        # the whole trace and the phase windows are the same bytes.
+        scen = _small_scenario(name="srv.test.concat")
+        w = scen.workload()
+        spec = w.trace(4, seed=11)
+        concat = np.concatenate(
+            [wt.addresses for wt in scen.window_traces(seed=11)])
+        assert (spec.addresses == concat).all()
+        assert spec.l3_factor == 1.0 and spec.mlp == scen.mlp
+
+    def test_workload_metadata(self):
+        scen = _small_scenario(name="srv.test.meta")
+        w = scen.workload()
+        assert w.family == "serving-bursty"
+        assert w.ai_ops_per_access == round(scen.offered_ai(), 3)
+        p = scen.params()
+        assert p["kernel"] == "pagedkv" and p["traffic_family"] == "bursty"
+        assert p["windows"] == 4 and p["window_refs"] == 2048
+
+    def test_bad_kernel_rejected(self):
+        with pytest.raises(ValueError, match="kernel must be one of"):
+            _small_scenario(kernel="conv")
+
+
+# --------------------------------------------------------------------------
+# Phase timelines
+# --------------------------------------------------------------------------
+class TestPhases:
+    def test_timeline_derivations(self):
+        tl = PhaseTimeline(name="x", labels=("1b", "1a", "1a", "1b"),
+                           metrics=(), windows=(), whole_label="1a")
+        assert tl.n_phases == 2 and tl.switches == 2
+        assert tl.timeline() == "1b-1a-1a-1b"
+        assert tl.dominant == "1b"    # 2-2 tie breaks to earliest-seen
+        assert tl.mitigation_timeline() == \
+            "-".join(MITIGATIONS[c] for c in tl.labels)
+        classes, mat = tl.transition_matrix()
+        assert classes == ("1a", "1b")
+        assert mat.sum() == len(tl.labels) - 1
+        assert mat[0, 0] == 1 and mat[0, 1] == 1 and mat[1, 0] == 1
+
+    def test_dominant_tie_breaks_to_earliest_seen(self):
+        tl = PhaseTimeline(name="x", labels=("1b", "1a", "1b", "1a"),
+                           metrics=(), windows=(), whole_label="1b")
+        assert tl.dominant == "1b"
+
+    def test_measure_windows_labels_every_window(self):
+        scen = _small_scenario(name="srv.test.phases")
+        tl = measure_windows(scen, cores=CORES)
+        assert len(tl.labels) == scen.n_windows
+        assert len(tl.metrics) == len(tl.windows) == scen.n_windows
+        assert all(lab in MITIGATIONS for lab in tl.labels)
+        assert tl.whole_label in MITIGATIONS
+        # metrics are per-window: the trace the classifier measured is the
+        # window's fixed-ref sample, so AI follows each window's offered mix
+        for m, wt in zip(tl.metrics, tl.windows):
+            assert m.ai == pytest.approx(round(wt.ai, 3))
+
+    @pytest.mark.slow  # full core sweep over the real bursty scenario
+    def test_bursty_roster_scenario_has_multiple_phases(self):
+        tl = measure_windows("srv.pagedkv.burst")
+        assert tl.n_phases >= 2
+        assert tl.whole_label == SCENARIOS["srv.pagedkv.burst"].expected_class
+
+
+# --------------------------------------------------------------------------
+# Suite integration
+# --------------------------------------------------------------------------
+class TestSuiteIntegration:
+    def test_serving_registry_roster(self):
+        reg = serving_registry()
+        assert len(reg) == len(SCENARIOS)
+        assert all(e.source == "serving" for e in reg)
+        assert {e.domain for e in reg} == {
+            "serving/pagedkv", "serving/moe", "serving/flashattn"}
+        names = [e.name for e in reg]
+        assert len(set(names)) == len(names)
+
+    def test_registry_for_switches_on_the_serving_section(self):
+        assert registry_for(sections=("serving",)).by_source("serving")
+        default = registry_for(sections=("scalability",))
+        assert not default.by_source("serving")
+        assert default.by_source("captured")
+
+    def test_serving_section_columns(self):
+        assert SECTION_COLUMNS["serving"] == (
+            "windows", "phases", "dominant_phase", "phase_timeline",
+            "best_mitigation", "best_speedup")
+
+    def test_runner_serving_row(self):
+        from repro.suite import SuiteRegistry
+
+        scen = _small_scenario(name="srv.test.row")
+        reg = SuiteRegistry()
+        reg.register(scen.workload(), domain="serving/pagedkv",
+                     source="serving", **scen.params())
+        # patch the scenario in so measure_windows can resolve it by name
+        SCENARIOS[scen.name] = scen
+        try:
+            runner = SuiteRunner(reg, cores=CORES, sections=("serving",))
+            roster = runner.roster()
+        finally:
+            del SCENARIOS[scen.name]
+        rec = roster.records()[0]
+        assert rec["windows"] == scen.n_windows
+        assert rec["phases"] >= 1
+        assert rec["dominant_phase"] in MITIGATIONS
+        assert rec["phase_timeline"].count("-") == scen.n_windows - 1
+        assert rec["best_mitigation"] in set(MITIGATIONS.values())
+        assert rec["best_speedup"] >= 1.0
+
+    def test_non_serving_entry_gets_placeholder_phase_columns(self):
+        from repro.suite import SuiteRegistry
+
+        reg = SuiteRegistry()
+        w = tracegen.make_suite(refs=2_000)[0]
+        reg.register(w, domain="synthetic-test", source="synthetic",
+                     refs=2_000)
+        runner = SuiteRunner(reg, cores=CORES, sections=("serving",))
+        rec = runner.roster().records()[0]
+        assert rec["windows"] == 0 and rec["phases"] == 0
+        assert rec["dominant_phase"] == "-" and rec["phase_timeline"] == "-"
+        assert rec["best_mitigation"] in set(MITIGATIONS.values())
+
+    def test_cli_list_serving(self, capsys):
+        from repro.suite.__main__ import main
+
+        assert main(["--sections", "serving", "--list"]) == 0
+        out = capsys.readouterr().out
+        assert "srv.pagedkv.burst" in out
+        assert f"{len(SCENARIOS)} serving" in out
+
+    def test_serving_cli_smoke(self, capsys):
+        from repro.serving.__main__ import main
+
+        assert main(["--scenario", "srv.pagedkv.burst",
+                     "--cores", "1,4"]) == 0
+        out = capsys.readouterr().out
+        assert "phase timeline" in out
+        assert "whole-trace" in out
+
+    def test_serving_cli_list(self, capsys):
+        from repro.serving.__main__ import main
+
+        assert main(["--list"]) == 0
+        out = capsys.readouterr().out
+        for name in SCENARIOS:
+            assert name in out

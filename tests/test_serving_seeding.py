@@ -1,0 +1,77 @@
+"""Regression: serving traffic + scenario traces are hash-seed independent.
+
+The serving subsystem derives every rng from the repo's stable crc32
+name-seed convention (``stable_name_seed``), never from builtin
+``hash()`` — so traffic demand streams and the composed window traces
+must be byte-identical across interpreter launches with different
+PYTHONHASHSEED values.  Same protocol as ``test_tracegen_seeding``:
+re-generate in fresh subprocesses and compare digests.
+"""
+
+import os
+import subprocess
+import sys
+import zlib
+
+import pytest
+
+from repro.core.tracegen import stable_name_seed
+from repro.serving import make_traffic, window_seed
+
+_CHILD = r"""
+import zlib
+import numpy as np
+from repro.serving import SCENARIOS, make_traffic
+
+digest = 0
+# traffic demand: every family, fixed (name, seed)
+for family in ("uniform", "zipfian", "hotspot", "bursty", "sequential",
+               "diurnal"):
+    p = make_traffic(family, keyspace=512, rate=4)
+    for dem in p.windows(4, 64, seed=7):
+        digest = zlib.crc32(np.ascontiguousarray(dem.keys).tobytes(), digest)
+        digest = zlib.crc32(repr((dem.arrivals,
+                                  round(dem.intensity, 9))).encode(), digest)
+# one composed scenario trace per kernel family
+for name in ("srv.pagedkv.burst", "srv.moe.unif", "srv.flash.diurnal"):
+    spec = SCENARIOS[name].workload().trace(4, seed=7)
+    digest = zlib.crc32(np.ascontiguousarray(spec.addresses).tobytes(),
+                        digest)
+print(digest)
+"""
+
+
+def _digest_under_hash_seed(hash_seed: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONHASHSEED"] = hash_seed
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = os.path.abspath(src)
+    out = subprocess.run(
+        [sys.executable, "-c", _CHILD], env=env,
+        capture_output=True, text=True, check=True,
+    )
+    return out.stdout.strip()
+
+
+@pytest.mark.slow  # three fresh interpreter subprocesses
+def test_serving_traces_equal_across_interpreter_hash_seeds():
+    digests = {_digest_under_hash_seed(s) for s in ("0", "1", "31337")}
+    assert len(digests) == 1, \
+        f"serving digests diverge across hash seeds: {digests}"
+
+
+def test_window_seed_is_the_trace_rngs_first_draw():
+    import numpy as np
+
+    rng = np.random.default_rng(9 + stable_name_seed("srv.pagedkv.burst"))
+    assert window_seed("srv.pagedkv.burst", 9) == int(rng.integers(1 << 31))
+
+
+def test_traffic_seed_offset_is_crc32():
+    p = make_traffic("uniform", keyspace=64, rate=2, name="srv-probe")
+    a = p.windows(2, 16, seed=3)
+    import numpy as np
+
+    rng = np.random.default_rng(3 + zlib.crc32(b"srv-probe") % 7919)
+    expect = rng.integers(0, 64, size=16, dtype=np.int64)
+    assert (a[0].keys == expect).all()
