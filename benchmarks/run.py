@@ -28,6 +28,10 @@ Sections map 1:1 to paper artifacts:
            16 scenarios cold against a fresh throwaway store, then
            ``serving_warm`` re-rosters against that store, timing the
            pure content-addressed recall path
+- models — the whole-model roster (repro.capture.zoo): traces + classifies
+           the 16 end-to-end decode/train zoo steps cold against its own
+           throwaway store, timing jaxpr walk + eqn lowering + windowed
+           trace walks end to end (skipped when jax is unavailable)
 - case1..case4 — §5 case studies
 - roofline — §Roofline TPU table (from results/dryrun artifacts)
 - kernels  — Pallas kernel microbench + v5e roofline bounds
@@ -177,6 +181,25 @@ def main() -> None:
         res.name = section
         return res
 
+    # whole-model roster: cold jaxpr walk + windowed trace + classify for
+    # the 16 zoo steps.  Same throwaway-store rationale as serving; needs
+    # jax to trace (gated, not stubbed — there is no jax-free fallback).
+    def models_roster():
+        from repro.suite import SuiteRunner, models_registry
+        from repro.study.result import StudyResult
+
+        try:
+            import jax  # noqa: F401
+        except ImportError:
+            return StudyResult(name="models", columns=("name", "note"),
+                               rows=[("models", "skipped: no jax")])
+        runner = SuiteRunner(models_registry(refs=refs),
+                             store=_serving_store(), backend=args.backend,
+                             sections=("models",))
+        res = runner.roster()
+        res.name = "models"
+        return res
+
     sections = {
         "fig1": lambda: paper_figures.fig1_roofline_mpki(study),
         "fig3": lambda: paper_figures.fig3_locality_clustering(study),
@@ -192,6 +215,7 @@ def main() -> None:
         # upper bound on the recall path)
         "serving": lambda: serving_roster("serving"),
         "serving_warm": lambda: serving_roster("serving_warm"),
+        "models": models_roster,
         "case1": lambda: paper_figures.case1_noc(study),
         "case2": lambda: paper_figures.case2_accelerators(study),
         "case3": lambda: paper_figures.case3_core_models(study),

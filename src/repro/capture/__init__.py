@@ -8,6 +8,13 @@ when jax is importable (:func:`from_jaxpr` — zero mirroring; see
 ``docs/adding-a-kernel.md``) and from per-kernel mirrored fallbacks
 otherwise, so the walk itself stays deterministic and requires neither a
 TPU nor jax.
+
+Beyond single kernels, :mod:`repro.capture.model` walks the jaxpr of a
+*whole jitted step* (decode / train) into one concatenated trace, and
+:mod:`repro.capture.zoo` wraps the 10-config model zoo's steps as suite
+workloads (``python -m repro.suite --sections models``); whole-step FLOPs
+come from :mod:`repro.capture.flops`'s arithmetic-eqn counter.  Both are
+imported lazily — whole-model capture has no jax-free fallback.
 """
 
 from .grid import (  # noqa: F401
@@ -34,4 +41,6 @@ __all__ = [
     "CapturedKernel",
     "CAPTURED_KERNELS",
     "captured_workloads",
+    # lazy (jax-only) whole-model capture lives in submodules:
+    #   repro.capture.model / repro.capture.zoo / repro.capture.flops
 ]

@@ -179,7 +179,8 @@ def from_jaxpr(fn, args, *, scalar_values=(), flops: float = 0.0,
                        name=name)
 
 
-def walk(cap: GridCapture, *, count_only: bool = False) -> CaptureResult:
+def walk(cap: GridCapture, *, count_only: bool = False,
+         bases: dict[str, int] | None = None) -> CaptureResult:
     """Replay the pipeline schedule and emit the word-address stream.
 
     Arrays are laid out back-to-back in HBM, line-aligned, in operand
@@ -191,13 +192,25 @@ def walk(cap: GridCapture, *, count_only: bool = False) -> CaptureResult:
     ``count_only`` skips address materialization and returns only the
     load/store/flop accounting (used to derive per-ref AI without paying
     for megaword traces, e.g. by ``python -m repro.suite --list``).
+
+    ``bases`` overrides the per-operand base word addresses (operand name
+    -> absolute base).  :mod:`repro.capture.model` places every op of a
+    whole-model capture in one shared address space this way — its
+    allocator applies the *same* line-aligned sizing rule as the default
+    layout here, so a single-op model capture is byte-identical to the
+    standalone walk (the differential gate in
+    ``tests/test_capture_model.py``).
     """
-    base: dict[str, int] = {}
-    cursor = 0
-    for op in cap.operands:
-        if op.name not in base:
-            base[op.name] = cursor
-            cursor += -(-op.words // _LINE_WORDS) * _LINE_WORDS + _LINE_WORDS
+    if bases is None:
+        base: dict[str, int] = {}
+        cursor = 0
+        for op in cap.operands:
+            if op.name not in base:
+                base[op.name] = cursor
+                cursor += (-(-op.words // _LINE_WORDS) * _LINE_WORDS
+                           + _LINE_WORDS)
+    else:
+        base = {op.name: bases[op.name] for op in cap.operands}
 
     def block_words(op: OperandSpec) -> int:
         n = 1

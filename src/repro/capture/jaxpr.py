@@ -48,8 +48,8 @@ import numpy as np
 
 from .grid import GridCapture, OperandSpec
 
-__all__ = ["from_jaxpr", "capture_path", "memoized",
-           "elems_per_word", "PATHS"]
+__all__ = ["from_jaxpr", "capture_pallas_eqn", "find_pallas_eqns",
+           "capture_path", "memoized", "elems_per_word", "PATHS"]
 
 PATHS = ("auto", "jaxpr", "mirror")
 
@@ -113,17 +113,41 @@ def clear_memo() -> None:
 # --------------------------------------------------------------------------
 # The jaxpr walker.
 # --------------------------------------------------------------------------
-def _find_pallas_eqns(jaxpr, out: list) -> list:
+def _param_jaxprs(v):
+    """Yield every jaxpr-like object inside one eqn param value.
+
+    Covers raw ``Jaxpr`` attrs (pjit, closed_call, custom_* wrappers) *and*
+    containers of them — ``cond`` keeps its branches in a tuple, which the
+    original attr-only walk silently missed.
+    """
+    # ClosedJaxpr first: it forwards .eqns to its inner jaxpr, so the
+    # raw-Jaxpr check would match it too — but callers need .invars.
+    if hasattr(v, "jaxpr"):          # ClosedJaxpr
+        yield v.jaxpr
+    elif hasattr(v, "eqns"):         # raw Jaxpr
+        yield v
+    elif isinstance(v, (tuple, list)):
+        for item in v:
+            yield from _param_jaxprs(item)
+
+
+def find_pallas_eqns(jaxpr, out: list | None = None) -> list:
     """Collect ``pallas_call`` eqns, recursing into nested jaxprs (pjit,
-    closed_call, custom_* wrappers)."""
+    scan, cond branches, closed_call, custom_* wrappers)."""
+    if out is None:
+        out = []
     for eqn in jaxpr.eqns:
         if eqn.primitive.name == "pallas_call":
             out.append(eqn)
+            continue  # a kernel body cannot contain another pallas_call
         for v in eqn.params.values():
-            inner = getattr(v, "jaxpr", None)
-            if inner is not None:
-                _find_pallas_eqns(inner, out)
+            for inner in _param_jaxprs(v):
+                find_pallas_eqns(inner, out)
     return out
+
+
+# Back-compat alias (pre-model-capture private name).
+_find_pallas_eqns = find_pallas_eqns
 
 
 def elems_per_word(dtype, *dims: int) -> int:
@@ -225,7 +249,8 @@ def _prefetch_spec(name: str, sds) -> OperandSpec:
 
 
 def from_jaxpr(fn, args: Sequence, *, scalar_values: Sequence = (),
-               flops: float = 0.0, name: str | None = None) -> GridCapture:
+               flops: float | None = 0.0,
+               name: str | None = None) -> GridCapture:
     """Capture one kernel launch's geometry by tracing its jaxpr.
 
     ``fn`` is traced with ``jax.make_jaxpr`` over ``args`` (concrete arrays
@@ -236,18 +261,33 @@ def from_jaxpr(fn, args: Sequence, *, scalar_values: Sequence = (),
     they are needed to evaluate data-dependent index maps (gather /
     paged-KV / MoE dispatch) and must equal the values the real launch
     would receive.  ``flops`` is the arithmetic-op count of the whole
-    launch (the jaxpr could estimate it, but hooks pass their exact model
-    so AI stays identical to the mirrored path).
+    launch; ``None`` derives it by counting the kernel jaxpr's arithmetic
+    eqns (:mod:`repro.capture.flops`) — hooks that keep a hand formula
+    pass it explicitly so AI stays identical to the mirrored path.
     """
     import jax
 
     closed = jax.make_jaxpr(fn)(*args)
-    eqns = _find_pallas_eqns(closed.jaxpr, [])
+    eqns = find_pallas_eqns(closed.jaxpr)
     if len(eqns) != 1:
         raise ValueError(
             f"expected exactly one pallas_call in the traced jaxpr, "
             f"found {len(eqns)}")
-    eqn = eqns[0]
+    return capture_pallas_eqn(eqns[0], scalar_values=scalar_values,
+                              flops=flops, name=name)
+
+
+def capture_pallas_eqn(eqn, *, scalar_values: Sequence = (),
+                       flops: float | None = None,
+                       name: str | None = None) -> GridCapture:
+    """Capture one already-traced ``pallas_call`` equation's geometry.
+
+    The eqn-level entry point :func:`from_jaxpr` bottoms out in — and the
+    one :mod:`repro.capture.model` calls directly for every ``pallas_call``
+    it discovers inside a whole-step jaxpr.  ``flops=None`` (the default
+    here, unlike :func:`from_jaxpr`'s legacy ``0.0``) counts the kernel
+    body's arithmetic eqns times the grid-step count.
+    """
     gm = eqn.params["grid_mapping"]
     grid = tuple(int(g) for g in gm.grid)
     in_shapes = list(gm.in_shapes)
@@ -294,5 +334,8 @@ def from_jaxpr(fn, args: Sequence, *, scalar_values: Sequence = (),
     if name is None:
         info = eqn.params.get("name_and_src_info")
         name = getattr(info, "name", None) or "pallas_call"
+    if flops is None:
+        from .flops import eqn_flops
+        flops = eqn_flops(eqn)
     return GridCapture(
         name=name, grid=grid, operands=tuple(operands), flops=flops)

@@ -1,0 +1,282 @@
+"""Whole-model zoo: end-to-end decode/train steps -> ``Workload`` entries.
+
+Where :mod:`repro.capture.kernels` captures one Pallas kernel per entry,
+this roster captures a *whole jitted step* of each model-zoo config —
+``LM.decode_step`` or the :func:`repro.train.step.build_train_step` update
+— through :func:`repro.capture.model.capture_model`: every ``dot_general``,
+conv, large arithmetic eqn and (if present) ``pallas_call`` in the traced
+jaxpr becomes a captured op in one shared address space, concatenated in
+real program order with real producer->consumer reuse (see the model
+walker's docstring for the region-allocation rules).
+
+Modeling conventions:
+
+- Tracing is abstract (``jax.eval_shape`` params/caches, ShapeDtypeStruct
+  tokens): no weights exist, no TPU runs, and the traces are deterministic
+  — entries take no rng and are **core-invariant** (data-parallel
+  replication: each core runs the same step on its own batch shard, so the
+  per-thread trace does not shrink with cores; ``l3_shared`` upstream).
+- Decode entries capture one token step against a ``cache_len``-token KV /
+  state cache at the serving batch size; train entries capture one full
+  update (forward + backward + AdamW) at the training batch size.
+- Train traces run to tens of megarefs; they are sampled down to
+  ``target_refs`` as one *contiguous steady-state window*
+  (:meth:`~repro.capture.model.ModelCapture.walk_window`, centered) —
+  cycling a short prefix would misrepresent a step whose phases (forward,
+  backward, optimizer) have different locality.  Decode traces land near
+  the target naturally and cycle like the captured kernels do.
+- AI is the whole-step counted FLOPs (:mod:`repro.capture.flops`) over the
+  whole-step refs — the step's true op:byte ratio, not the window's.
+
+Expected classes are pinned from the measured pipeline verdicts (the
+roster-stability test recomputes them).  Every zoo step lands in **1b**
+— whole steps fuse matmul-heavy ops with their elementwise epilogues, so
+per-word arithmetic stays high (AI ~10-40 ops/word), MPKI stays under the
+paper's 11.0 threshold, and reuse distances (weight tiles revisited
+across k-steps, the residual stream across layers) exceed the Eq.-2
+temporal window: the latency-bound, prefetch-friendly profile — the same
+branch the standalone flash-attention kernel takes, now shown to hold
+for the end-to-end steps it lives in.  That uniformity is itself the
+DAMOV-style finding: isolated kernels span 1a/1b/1c, but whole smoke
+steps average over their op mix.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.tracegen import TraceSpec, Workload
+
+from .model import ModelCapture, capture_model
+
+__all__ = ["ModelZooEntry", "MODEL_ZOO", "model_workloads"]
+
+# Whole-model entries aim at the same simulated-trace scale as the
+# captured kernels (DAMOV's methodology is length-normalized).
+_TARGET_REFS = 200_000
+
+# Trace geometry: decode serves a 256-token cache; train sees 128-token
+# sequences.  Both are smoke-scale — whole-model capture is about op *mix*
+# and reuse structure, not parameter count.
+_CACHE_LEN = 256
+_TRAIN_SEQ = 128
+
+# Audio (Whisper) steps need encoder frame embeddings next to the tokens.
+_AUDIO_FRAMES = 64
+
+
+@dataclass(frozen=True)
+class ModelZooEntry:
+    """Declaration of one whole-model suite entry."""
+
+    name: str                   # model.<config>.<mode>.bs<k>
+    config: str                 # repro.configs arch name
+    mode: str                   # "decode" | "train"
+    batch: int
+    expected_class: str
+    domain: str = "model/dense"  # model/<config family>
+    target_refs: int = _TARGET_REFS
+    mlp: float = 8.0
+    instr_overhead: float = 2.0
+
+    def params(self) -> dict:
+        return {
+            "config": self.config,
+            "mode": self.mode,
+            "batch": self.batch,
+            "target_refs": self.target_refs,
+            "l3": "shared",     # data-parallel replication
+            "mlp": self.mlp,
+            "geometry": (f"cache{_CACHE_LEN}" if self.mode == "decode"
+                         else f"seq{_TRAIN_SEQ}"),
+        }
+
+
+# repro.configs family per arch, mirrored here so importing the zoo
+# declarations never needs jax (capture does; see _capture_*).
+_FAMILIES = {
+    "qwen2.5-14b": "dense", "phi4-mini-3.8b": "dense",
+    "nemotron-4-340b": "dense", "granite-20b": "dense",
+    "deepseek-moe-16b": "moe", "deepseek-v2-lite-16b": "moe",
+    "zamba2-7b": "hybrid", "mamba2-780m": "ssm",
+    "whisper-large-v3": "audio", "paligemma-3b": "vlm",
+}
+
+
+def _zoo() -> tuple[ModelZooEntry, ...]:
+    decode8 = {
+        "qwen2.5-14b": "1b",
+        "phi4-mini-3.8b": "1b",
+        "nemotron-4-340b": "1b",
+        "granite-20b": "1b",
+        "deepseek-moe-16b": "1b",
+        "deepseek-v2-lite-16b": "1b",
+        "zamba2-7b": "1b",
+        "mamba2-780m": "1b",
+        "whisper-large-v3": "1b",
+        "paligemma-3b": "1b",
+    }
+    train4 = {
+        "qwen2.5-14b": "1b",
+        "deepseek-moe-16b": "1b",
+        "mamba2-780m": "1b",
+        "zamba2-7b": "1b",
+    }
+    decode1 = {
+        "qwen2.5-14b": "1b",
+        "deepseek-v2-lite-16b": "1b",
+    }
+    out = []
+    for cfg, cls in decode8.items():
+        out.append(ModelZooEntry(
+            name=f"model.{cfg}.decode.bs8", config=cfg, mode="decode",
+            batch=8, expected_class=cls, domain=f"model/{_FAMILIES[cfg]}"))
+    for cfg, cls in train4.items():
+        out.append(ModelZooEntry(
+            name=f"model.{cfg}.train.bs4", config=cfg, mode="train",
+            batch=4, expected_class=cls, domain=f"model/{_FAMILIES[cfg]}"))
+    for cfg, cls in decode1.items():
+        out.append(ModelZooEntry(
+            name=f"model.{cfg}.decode.bs1", config=cfg, mode="decode",
+            batch=1, expected_class=cls, domain=f"model/{_FAMILIES[cfg]}"))
+    return tuple(out)
+
+
+MODEL_ZOO: tuple[ModelZooEntry, ...] = _zoo()
+
+
+# One ModelCapture per (config, mode, batch): suite builds, core sweeps
+# and the --list AI column all re-request the same step.
+_CAPTURES: dict[tuple[str, str, int], ModelCapture] = {}
+
+
+def _audio_embed(batch: int):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke
+
+    d = get_smoke("whisper-large-v3").d_model
+    return jax.ShapeDtypeStruct((batch, _AUDIO_FRAMES, d), jnp.float32)
+
+
+def _capture_decode(config: str, batch: int) -> ModelCapture:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke
+    from repro.models.model import LM
+
+    lm = LM(get_smoke(config))
+    params = jax.eval_shape(lambda: lm.init(jax.random.PRNGKey(0)))
+    cache = jax.eval_shape(lambda: lm.init_cache(batch, _CACHE_LEN))
+    toks = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return capture_model(
+        lambda p, t, c, po: lm.decode_step(p, t, c, po),
+        (params, toks, cache, pos),
+        name=f"{config}.decode.bs{batch}")
+
+
+def _capture_train(config: str, batch: int) -> ModelCapture:
+    import jax
+    import jax.numpy as jnp
+
+    import repro.train.optimizer as O
+    import repro.train.step as T
+    from repro.configs import get_smoke
+    from repro.models.model import LM
+
+    lm = LM(get_smoke(config))
+    opt_cfg = O.AdamWConfig()
+    step = T.build_train_step(lm, opt_cfg, microbatches=1)
+
+    def mk_state():
+        params = lm.init(jax.random.PRNGKey(0))
+        return params, T.init_train_state(lm, params, opt_cfg)
+
+    params, state = jax.eval_shape(mk_state)
+    tok = jax.ShapeDtypeStruct((batch, _TRAIN_SEQ), jnp.int32)
+    batch_d = {"tokens": tok, "labels": tok}
+    if get_smoke(config).family == "audio":
+        batch_d["extra_embed"] = _audio_embed(batch)
+    return capture_model(
+        lambda p, st, b: step(p, st, b), (params, state, batch_d),
+        name=f"{config}.train.bs{batch}")
+
+
+def get_capture(config: str, mode: str, batch: int) -> ModelCapture:
+    """The memoized whole-step capture behind one zoo entry."""
+    key = (config, mode, batch)
+    got = _CAPTURES.get(key)
+    if got is None:
+        build = _capture_decode if mode == "decode" else _capture_train
+        got = _CAPTURES[key] = build(config, batch)
+    return got
+
+
+# Windowed/cycled trace + whole-step accounting, once per entry (the suite
+# regenerates traces per core count; these are core-invariant).
+_TRACES: dict[str, tuple[np.ndarray, float]] = {}
+
+
+def _trace_and_ai(spec: ModelZooEntry) -> tuple[np.ndarray, float]:
+    got = _TRACES.get(spec.name)
+    if got is None:
+        mc = get_capture(spec.config, spec.mode, spec.batch)
+        addr = mc.walk_window(spec.target_refs).addresses
+        if addr.size != spec.target_refs:
+            addr = np.resize(addr, spec.target_refs)
+        # AI over the WHOLE step's refs, not the window's: per-ref
+        # intensity is scale-invariant, so the windowed trace simulated
+        # with this AI models the full step's op:byte ratio.
+        whole_refs = mc.walk(count_only=True).refs
+        ai = mc.flops / whole_refs if whole_refs else 0.0
+        got = _TRACES[spec.name] = (addr, ai)
+    return got
+
+
+def _make_gen(spec: ModelZooEntry):
+    def gen(cores: int, rng: np.random.Generator) -> TraceSpec:
+        del cores, rng  # data-parallel + deterministic abstract trace
+        addr, _ = _trace_and_ai(spec)
+        return TraceSpec(
+            addresses=addr,
+            l3_factor=1.0,          # replicated batch shards share the L3
+            mlp=spec.mlp,
+            dram_rows_irregular=False,
+        )
+    return gen
+
+
+def model_workloads(
+    specs: tuple[ModelZooEntry, ...] = MODEL_ZOO,
+    *,
+    only: tuple[str, ...] | None = None,
+) -> list[Workload]:
+    """Wrap zoo entries as pipeline-ready ``Workload``\\ s (requires jax).
+
+    ``only`` filters by comma-style substrings (any match keeps the
+    entry) — the CI roster leg traces two small configs instead of the
+    whole zoo.  Filtering never changes per-entry traces or fingerprints,
+    so store rows stay recallable across differently-filtered runs.
+    """
+    picked = [
+        s for s in specs
+        if only is None or any(sub in s.name for sub in only)
+    ]
+    out: list[Workload] = []
+    for spec in picked:
+        _, ai = _trace_and_ai(spec)
+        ai = round(ai, 3)
+        out.append(Workload(
+            name=spec.name,
+            family=f"model-{spec.mode}",
+            expected_class=spec.expected_class,
+            ai_ops_per_access=ai,
+            instr_per_access=round(ai + spec.instr_overhead, 3),
+            gen=_make_gen(spec),
+        ))
+    return out

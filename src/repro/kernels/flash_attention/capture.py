@@ -46,6 +46,11 @@ def capture(*, sq: int, sk: int, d: int, bq: int = 128, bk: int = 128,
     sq_t, sk_t = n_q * bq, n_kv * bk
 
     steps = n_q * n_kv
+    # The hand model stays authoritative on BOTH capture paths: the flat
+    # 6-ops-per-score softmax constant differs from the jaxpr-counted cost
+    # by <0.5% (dots dominate at 4*bq*bk*d), and the jax-free mirror has
+    # no jaxpr to count — keeping one formula keeps the paths
+    # counter-identical.  tests/test_capture_model.py pins the agreement.
     flops = steps * (4.0 * bq * bk * d + _SOFTMAX_OPS_PER_SCORE * bq * bk)
     if capture_path(path) == "jaxpr":
         return memoized(

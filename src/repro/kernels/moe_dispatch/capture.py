@@ -65,12 +65,15 @@ def capture(*, n_tokens: int, d: int, f: int, n_experts: int,
         return memoized(
             ("moe_dispatch", n_tokens, d, f, n_experts,
              tok.tobytes(), eid.tobytes()),
-            lambda: _traced(n_tokens, d, f, n_experts, tok, eid, flops))
+            lambda: _traced(n_tokens, d, f, n_experts, tok, eid))
     return _mirror(n_tokens, d, f, n_experts, tok, eid, flops)
 
 
 def _traced(n_tokens: int, d: int, f: int, n_experts: int,
-            tok: np.ndarray, eid: np.ndarray, flops: float) -> GridCapture:
+            tok: np.ndarray, eid: np.ndarray) -> GridCapture:
+    # flops=None: counted off the kernel jaxpr — the per-token [1,d]x[d,f]
+    # GEMM dot_general counts to exactly dispatch_flops(), which the
+    # jax-free mirror below keeps as its formula.
     import jax
     import jax.numpy as jnp
 
@@ -82,7 +85,7 @@ def _traced(n_tokens: int, d: int, f: int, n_experts: int,
     return from_jaxpr(
         moe_dispatch_sorted, (x, w, ids, ids),
         scalar_values=(tok.astype(np.int32), eid.astype(np.int32)),
-        flops=flops, name="moe_dispatch")
+        flops=None, name="moe_dispatch")
 
 
 def _mirror(n_tokens: int, d: int, f: int, n_experts: int,

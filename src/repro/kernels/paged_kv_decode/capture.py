@@ -60,6 +60,9 @@ def capture(*, n_pages: int, page: int, d: int, h: int, n_active: int,
         raise ValueError("capture needs either rng or page_table")
     else:
         pt = rng.choice(n_pages, size=n_active, replace=False).astype(np.int64)
+    # Kept on both capture paths (the mirror has no jaxpr to count); the
+    # jaxpr counter agrees within ~5% — the formula rounds the per-page
+    # softmax epilogue — pinned by tests/test_capture_model.py.
     flops = decode_flops(h=h, page=page, d=d, n_active=n_active)
     if capture_path(path) == "jaxpr":
         return memoized(

@@ -48,6 +48,10 @@ def capture(op: str, *, seq_len: int, d: int, n: int = 128,
     if d % 128:
         raise ValueError(f"d {d} must be a multiple of 128 (lane dim)")
     t_thread = max(chunk, seq_len // max(1, cores) // chunk * chunk)
+    # Kept on both capture paths (the mirror has no jaxpr to count): the
+    # jaxpr counter reproduces the ema formula exactly and the expand
+    # closed form within ~0.5% (it folds the chunk-boundary mask ops into
+    # 5*C*d) — pinned by tests/test_capture_model.py.
     flops = scan_flops(op, seq_len=t_thread, d=d, n=n, chunk=chunk)
     if capture_path(path) == "jaxpr":
         return memoized(

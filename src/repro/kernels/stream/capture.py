@@ -46,13 +46,18 @@ def capture(op: str, n_elems: int, *, cores: int = 1,
     if capture_path(path) == "jaxpr":
         return memoized(
             ("stream", op, n_thread, block_rows),
-            lambda: _traced(op, n_thread, block_rows, flops))
+            lambda: _traced(op, n_thread, block_rows))
     return _mirror(op, n_thread, block_rows, flops)
 
 
-def _traced(op: str, n_thread: int, block_rows: int,
-            flops: float) -> GridCapture:
-    """Trace the real kernel's ``pallas_call`` over the per-thread slice."""
+def _traced(op: str, n_thread: int, block_rows: int) -> GridCapture:
+    """Trace the real kernel's ``pallas_call`` over the per-thread slice.
+
+    ``flops=None``: counted off the kernel jaxpr's arithmetic eqns
+    (:mod:`repro.capture.flops`) — exactly the per-element op mix the
+    mirror's ``STREAM_OPS`` table hand-codes, so the two paths stay
+    counter-identical without a duplicated formula here.
+    """
     import jax
     import jax.numpy as jnp
 
@@ -69,7 +74,7 @@ def _traced(op: str, n_thread: int, block_rows: int,
     fn, args = fns[op]
     return from_jaxpr(
         lambda *xs: fn(*xs, block_rows=block_rows), args,
-        flops=flops, name=f"stream_{op}")
+        flops=None, name=f"stream_{op}")
 
 
 def _mirror(op: str, n_thread: int, block_rows: int,

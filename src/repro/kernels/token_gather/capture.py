@@ -46,10 +46,12 @@ def _traced(n_rows: int, d: int, m: int, idx: np.ndarray) -> GridCapture:
 
     table = jax.ShapeDtypeStruct((n_rows, d), jnp.float32)
     idx_sds = jax.ShapeDtypeStruct((m,), jnp.int32)
+    # flops=None: counted off the kernel jaxpr — a pure row copy has no
+    # float arithmetic, so the counter lands on the mirror's literal 0.0.
     return from_jaxpr(
         gather_rows, (table, idx_sds),
         scalar_values=(idx.astype(np.int32),),
-        flops=0.0, name="token_gather")
+        flops=None, name="token_gather")
 
 
 def _mirror(n_rows: int, d: int, m: int, idx: np.ndarray) -> GridCapture:

@@ -12,9 +12,11 @@ substrate      evidence
                ``repro.core.analytic``): compute / HBM / collective
                roofline -> compute | hbm | collective | latency classes
 ``suite``      the registered benchmark roster (``repro.suite``): synthetic
-               family expansions + captured Pallas-kernel DMA traces,
-               characterized like ``trace`` and persisted to the
-               content-addressed result store
+               family expansions + captured Pallas-kernel DMA traces
+               (plus, via ``--sections serving``/``models``, traffic
+               scenarios and whole-model zoo steps), characterized like
+               ``trace`` and persisted to the content-addressed result
+               store
 =============  ===========================================================
 
 All implement the :class:`Substrate` protocol — ``characterize()`` returns

@@ -13,6 +13,7 @@ from .registry import (  # noqa: F401
     SuiteEntry,
     SuiteRegistry,
     default_registry,
+    models_registry,
     registry_for,
     serving_registry,
 )
@@ -28,6 +29,7 @@ __all__ = [
     "SuiteRegistry",
     "default_registry",
     "serving_registry",
+    "models_registry",
     "registry_for",
     "SuiteRunner",
     "ResultStore",

@@ -26,6 +26,13 @@ Examples::
     # timelines and best-mitigation columns (repro.serving)
     python -m repro.suite --sections serving --fast --check
 
+    # the whole-model roster: end-to-end decode/train steps of the
+    # 10-config model zoo (repro.capture.zoo; needs jax to trace)
+    python -m repro.suite --sections models --fast --check
+
+    # trace only two small configs of the zoo (CI roster leg)
+    python -m repro.suite --sections models --filter qwen,mamba2 --fast
+
     # prune store records from old schema versions
     python -m repro.suite --gc
 """
@@ -58,6 +65,14 @@ def parse_sections(text: str) -> tuple[str, ...]:
     return sections
 
 
+def parse_filter(text: str) -> tuple[str, ...]:
+    """Comma list of name substrings -> tuple (``--filter``)."""
+    subs = tuple(s.strip() for s in text.split(",") if s.strip())
+    if not subs:
+        raise argparse.ArgumentTypeError("empty --filter")
+    return subs
+
+
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
         prog="python -m repro.suite",
@@ -82,6 +97,12 @@ def build_parser() -> argparse.ArgumentParser:
                          f"{','.join(sorted(SECTION_COLUMNS))} (computed "
                          "from the same memoized engine cells; stored "
                          "under section-specific record keys)")
+    ap.add_argument("--filter", type=parse_filter, default=None,
+                    metavar="SUB[,SUB]",
+                    help="keep only entries whose name contains any of "
+                         "the comma-separated substrings (models roster "
+                         "only — lets a CI leg trace a subset of the zoo; "
+                         "never changes per-entry traces or store keys)")
     ap.add_argument("--processes", type=int, default=1, metavar="N",
                     help="fan whole entries across N worker processes "
                          "(0 = one per CPU; default 1 = in-process)")
@@ -127,16 +148,21 @@ def main(argv: list[str] | None = None) -> int:
               f"{len(store)} kept in {store.root}", file=sys.stderr)
         return 0
 
-    registry = registry_for(refs=refs, sections=args.sections)
+    if args.filter and "models" not in args.sections:
+        print("# --filter only applies to the models roster "
+              "(--sections models)", file=sys.stderr)
+        return 2
+    registry = registry_for(refs=refs, sections=args.sections,
+                            only=args.filter)
 
     if args.list:
         for e in registry:
             params = ", ".join(f"{k}={v}" for k, v in e.params)
-            print(f"{e.name:28s} {e.source:9s} {e.domain:24s} "
+            print(f"{e.name:40s} {e.source:9s} {e.domain:24s} "
                   f"expected={e.expected_class}  [{params}]")
         split = ", ".join(
             f"{len(registry.by_source(s))} {s}"
-            for s in ("synthetic", "captured", "serving")
+            for s in ("synthetic", "captured", "serving", "model")
             if registry.by_source(s))
         print(f"# {len(registry)} entries ({split})")
         return 0
@@ -153,7 +179,7 @@ def main(argv: list[str] | None = None) -> int:
               f"engine: {runner.study.stats.as_dict()}", file=sys.stderr)
 
     if args.check:
-        bad = [rec for source in ("captured", "serving")
+        bad = [rec for source in ("captured", "serving", "model")
                for rec in runner.divergent(source=source)]
         if bad:
             for rec in bad:

@@ -1,11 +1,13 @@
-"""Benchmark-suite registry: many workloads, two sources, one record type.
+"""Benchmark-suite registry: many workloads, several sources, one record.
 
 DAMOV's core artifact is its *suite* (144 functions spanning many domains,
 characterized by one methodology, §4 / Table 3).  This registry is that
 idea at repo scale: a :class:`SuiteEntry` per workload — synthetic
 (parameterized expansions of the seven access-pattern families in
-:mod:`repro.core.tracegen`) or captured (real Pallas-kernel DMA streams
-from :mod:`repro.capture`) — with the domain / source / expected-class /
+:mod:`repro.core.tracegen`), captured (real Pallas-kernel DMA streams
+from :mod:`repro.capture`), serving (production-traffic scenarios), or
+model (whole decode/train steps of the 10-config model zoo,
+:mod:`repro.capture.zoo`) — with the domain / source / expected-class /
 parameter metadata the Table-3-style roster reports.
 
 :func:`default_registry` builds the standard roster: a footprint /
@@ -48,8 +50,8 @@ from repro.core import tracegen
 from repro.core.tracegen import Workload
 
 __all__ = ["SuiteEntry", "SuiteRegistry", "default_registry",
-           "serving_registry", "registry_for", "SUITE_SCHEMA",
-           "LEGACY_SCHEMA"]
+           "serving_registry", "models_registry", "registry_for",
+           "SUITE_SCHEMA", "LEGACY_SCHEMA"]
 
 # Bumped whenever capture geometry or roster methodology changes in a way
 # that invalidates stored results.
@@ -70,13 +72,13 @@ class SuiteEntry:
 
     workload: Workload
     domain: str
-    source: str                     # "synthetic" | "captured" | "serving"
+    source: str            # "synthetic" | "captured" | "serving" | "model"
     params: tuple[tuple[str, object], ...]   # sorted (key, value) pairs
 
     def __post_init__(self) -> None:
-        if self.source not in ("synthetic", "captured", "serving"):
-            raise ValueError(f"source must be synthetic|captured|serving, "
-                             f"got {self.source!r}")
+        if self.source not in ("synthetic", "captured", "serving", "model"):
+            raise ValueError(f"source must be synthetic|captured|serving|"
+                             f"model, got {self.source!r}")
 
     @property
     def name(self) -> str:
@@ -257,12 +259,46 @@ def serving_registry(*, refs: int | None = None) -> SuiteRegistry:
     return reg
 
 
+def models_registry(*, refs: int | None = None,
+                    only: tuple[str, ...] | None = None) -> SuiteRegistry:
+    """The whole-model roster: one entry per model-zoo (config, mode, bs).
+
+    Building it traces each config's jitted step with jax
+    (:mod:`repro.capture.zoo`) — unlike the default roster there is no
+    jax-free fallback; a jax-less interpreter should stick to the
+    synthetic + captured sections.  Model traces are abstract and
+    deterministic and do **not** scale with ``refs`` (the marker is
+    carried for worker reconstruction, like the serving roster).
+
+    ``only`` keeps entries whose name contains any of the given
+    substrings (the CI roster leg traces two small configs, not the whole
+    zoo); filtering changes neither traces nor fingerprints, so store
+    rows recall across differently-filtered runs.
+    """
+    from repro.capture.zoo import MODEL_ZOO, model_workloads
+
+    refs = tracegen.DEFAULT_REFS if refs is None else refs
+    reg = SuiteRegistry(refs=refs)
+    specs = [
+        s for s in MODEL_ZOO
+        if only is None or any(sub in s.name for sub in only)
+    ]
+    for spec, w in zip(specs, model_workloads(tuple(specs))):
+        reg.register(w, domain=spec.domain, source="model", **spec.params())
+    return reg
+
+
 def registry_for(*, refs: int | None = None,
-                 sections: tuple[str, ...] = ()) -> SuiteRegistry:
+                 sections: tuple[str, ...] = (),
+                 only: tuple[str, ...] | None = None) -> SuiteRegistry:
     """The registry a roster request resolves to: the serving roster when
-    the ``serving`` section is requested, the default roster otherwise.
-    Both the CLI and the process-pool workers route through here, so a
-    fanned-out serving entry reconstructs in its worker."""
+    the ``serving`` section is requested, the whole-model roster for the
+    ``models`` section, the default roster otherwise.  Both the CLI and
+    the process-pool workers route through here, so a fanned-out serving
+    or model entry reconstructs in its worker (workers pass no ``only``
+    filter — it subsets a roster, never changes an entry)."""
     if "serving" in sections:
         return serving_registry(refs=refs)
+    if "models" in sections:
+        return models_registry(refs=refs, only=only)
     return default_registry(refs=refs)

@@ -65,12 +65,17 @@ ROSTER_COLUMNS = (
 # phase, the full per-window class timeline) and the best-performing
 # data-movement mitigation with its speedup over the plain host at the
 # sweep's top core count; requesting it also swaps the roster to the
-# repro.serving scenarios (see registry_for).
+# repro.serving scenarios (see registry_for).  ``models``: whole-step op
+# census (total / dense / stream / pallas op counts and the shared
+# address-space footprint) from the entry's memoized ModelCapture;
+# requesting it swaps the roster to the model zoo.
 SECTION_COLUMNS: dict[str, tuple[str, ...]] = {
     "scalability": ("host_speedup", "ndp_speedup"),
     "energy": ("host_mj", "ndp_mj", "ndp_energy_ratio"),
     "serving": ("windows", "phases", "dominant_phase", "phase_timeline",
                 "best_mitigation", "best_speedup"),
+    "models": ("model_ops", "dense_ops", "stream_ops", "pallas_ops",
+               "footprint_mib"),
 }
 
 # A mitigation must beat the plain host by this factor before the roster
@@ -172,6 +177,8 @@ class SuiteRunner:
         """Extra per-entry columns, from the same memoized engine cells."""
         if section == "serving":
             return self._serving_values(entry)
+        if section == "models":
+            return self._model_values(entry)
         r = self.study.scalability(entry.workload)
         host = r.points["host"]
         ndp = r.points["ndp"]
@@ -204,6 +211,20 @@ class SuiteRunner:
         else:
             phase_cols = (0, 0, "-", "-")
         return phase_cols + self._best_mitigation(entry)
+
+    def _model_values(self, entry: SuiteEntry) -> tuple:
+        """Whole-step op census for a model entry (placeholder columns on
+        any other source — the section can ride on other rosters too)."""
+        if entry.source != "model":
+            return (0, 0, 0, 0, 0.0)
+        from repro.capture.zoo import get_capture
+
+        p = dict(entry.params)
+        mc = get_capture(p["config"], p["mode"], p["batch"])
+        kinds = mc.op_kinds
+        return (len(mc.ops), kinds.get("dense", 0), kinds.get("stream", 0),
+                kinds.get("pallas", 0),
+                round(mc.footprint_words * 8 / 2**20, 3))
 
     def _best_mitigation(self, entry: SuiteEntry) -> tuple:
         """(name, speedup) of the best substrate vs the plain host at the
@@ -367,7 +388,8 @@ class SuiteRunner:
         roster = self.roster()
         present = {e.source for e in self.registry}
         sources = tuple(
-            s for s in ("synthetic", "captured", "serving") if s in present
+            s for s in ("synthetic", "captured", "serving", "model")
+            if s in present
         ) or ("synthetic", "captured")
         counts: dict[str, dict[str, int]] = {
             c: dict.fromkeys(sources, 0) for c in CLASSES

@@ -1,0 +1,133 @@
+"""repro.checkpoint.store: atomicity, restart, retention, corruption."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+jnp = pytest.importorskip("jax.numpy")
+
+from repro.checkpoint.store import (  # noqa: E402
+    CheckpointManager, latest_step, load_checkpoint, save_checkpoint)
+
+
+def _tree():
+    return {
+        "params": {
+            "w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "blocks": [jnp.ones((2, 2), jnp.bfloat16),
+                       jnp.zeros((5,), jnp.int32)],
+        },
+        "step_count": jnp.asarray(7, jnp.int32),
+    }
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert np.asarray(x).dtype == np.asarray(y).dtype
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_round_trip_preserves_values_dtypes_structure(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 3, _tree())
+    step, got = load_checkpoint(d)
+    assert step == 3
+    _assert_trees_equal(got, _tree())
+    # lists stay lists through the manifest structure spec
+    assert isinstance(got["params"]["blocks"], list)
+
+
+def test_bfloat16_round_trips_bit_exact(tmp_path):
+    d = str(tmp_path)
+    x = {"m": (jnp.linspace(-3.0, 3.0, 64).astype(jnp.bfloat16))}
+    save_checkpoint(d, 0, x)
+    _, got = load_checkpoint(d, 0)
+    assert np.asarray(got["m"]).dtype == np.asarray(x["m"]).dtype
+    np.testing.assert_array_equal(
+        np.asarray(got["m"]).view(np.uint16),
+        np.asarray(x["m"]).view(np.uint16))
+
+
+def test_latest_step_empty_and_missing_dir(tmp_path):
+    assert latest_step(str(tmp_path)) is None
+    assert latest_step(str(tmp_path / "nope")) is None
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint(str(tmp_path))
+
+
+def test_uncommitted_step_is_invisible(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree())
+    save_checkpoint(d, 2, _tree())
+    # simulate a writer killed after rename of a partial dir: no COMMIT
+    os.remove(os.path.join(d, "step_00000002", "COMMIT"))
+    assert latest_step(d) == 1
+    step, _ = load_checkpoint(d)
+    assert step == 1
+
+
+def test_leftover_tmp_dir_is_ignored(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 4, _tree())
+    os.makedirs(os.path.join(d, "step_00000009.tmp"))
+    assert latest_step(d) == 4
+
+
+def test_corrupt_leaf_raises(tmp_path):
+    d = str(tmp_path)
+    final = save_checkpoint(d, 0, {"w": jnp.ones((8, 8))})
+    leaf = os.path.join(final, "w.npy")
+    with open(leaf, "wb") as f:
+        f.write(b"\x00" * 10)   # truncated / garbage npy header
+    with pytest.raises(ValueError):
+        load_checkpoint(d, 0)
+
+
+def test_missing_manifest_key_raises(tmp_path):
+    d = str(tmp_path)
+    final = save_checkpoint(d, 0, {"a": jnp.ones(4), "b": jnp.ones(4)})
+    mpath = os.path.join(final, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    os.remove(os.path.join(final, "b.npy"))
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint(d, 0)
+    # manifest referencing a leaf absent from disk and vice versa
+    del manifest["leaves"]["b"]
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(KeyError):
+        load_checkpoint(d, 0)
+
+
+def test_save_overwrites_same_step(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 5, {"w": jnp.zeros(4)})
+    save_checkpoint(d, 5, {"w": jnp.ones(4)})
+    _, got = load_checkpoint(d, 5)
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.ones(4))
+
+
+def test_manager_retention_keeps_newest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, {"w": jnp.full((4,), float(s))})
+    assert mgr.latest_step() == 4
+    kept = sorted(n for n in os.listdir(str(tmp_path))
+                  if n.startswith("step_"))
+    assert kept == ["step_00000003", "step_00000004"]
+
+
+def test_manager_async_save_commits_after_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    tree = {"w": jnp.arange(16, dtype=jnp.float32)}
+    mgr.save(10, tree)
+    mgr.wait()
+    step, got = mgr.restore_latest()
+    assert step == 10
+    _assert_trees_equal(got, tree)

@@ -1,0 +1,163 @@
+"""repro.train.{step,optimizer,compress}: invariants + deterministic loss."""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+jnp = pytest.importorskip("jax.numpy")
+
+import repro.train.compress as C      # noqa: E402
+import repro.train.optimizer as O     # noqa: E402
+import repro.train.step as T          # noqa: E402
+
+
+# --------------------------------------------------------------------------
+# optimizer
+# --------------------------------------------------------------------------
+def test_cosine_schedule_warmup_and_floor():
+    cfg = O.AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                        min_lr_frac=0.1)
+    assert float(O.cosine_schedule(cfg, jnp.asarray(0))) == 0.0
+    mid = float(O.cosine_schedule(cfg, jnp.asarray(5)))
+    assert 0.0 < mid < cfg.lr
+    assert float(O.cosine_schedule(cfg, jnp.asarray(10))) == pytest.approx(
+        cfg.lr)
+    end = float(O.cosine_schedule(cfg, jnp.asarray(100)))
+    assert end == pytest.approx(cfg.lr * cfg.min_lr_frac)
+    # past the horizon the schedule stays at the floor
+    assert float(O.cosine_schedule(cfg, jnp.asarray(500))) == pytest.approx(
+        end)
+
+
+def test_global_norm():
+    tree = {"a": jnp.asarray([3.0, 0.0]), "b": [jnp.asarray([[4.0]])]}
+    assert float(O.global_norm(tree)) == pytest.approx(5.0)
+
+
+def _toy_params():
+    return {"w": jnp.ones((4, 4), jnp.float32),
+            "b": jnp.zeros((4,), jnp.float32)}
+
+
+def test_init_opt_state_dtypes_and_shapes():
+    cfg = O.AdamWConfig()
+    st = O.init_opt_state(_toy_params(), cfg)
+    assert int(st["step"]) == 0
+    for leaf in jax.tree.leaves(st["mu"]) + jax.tree.leaves(st["nu"]):
+        assert leaf.dtype == jnp.bfloat16
+    assert st["mu"]["w"].shape == (4, 4)
+
+
+def test_apply_updates_descends_and_clips():
+    cfg = O.AdamWConfig(lr=1e-2, weight_decay=0.0, clip_norm=1.0)
+    params = _toy_params()
+    grads = jax.tree.map(lambda p: jnp.full(p.shape, 100.0), params)
+    new_params, st, m = O.apply_updates(
+        params, grads, O.init_opt_state(params, cfg), cfg)
+    assert int(st["step"]) == 1
+    assert float(m["grad_norm"]) > cfg.clip_norm   # raw norm, pre-clip
+    # positive grads -> params decrease; update magnitude bounded by lr-ish
+    dw = np.asarray(params["w"] - new_params["w"])
+    assert (dw > 0).all() and dw.max() < 10 * cfg.lr
+    # params keep their dtype/shape tree
+    assert jax.tree.structure(new_params) == jax.tree.structure(params)
+    for a, b in zip(jax.tree.leaves(new_params), jax.tree.leaves(params)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+
+
+def test_apply_updates_weight_decay_shrinks_params():
+    cfg = O.AdamWConfig(lr=1e-2, weight_decay=0.5, warmup_steps=0)
+    params = _toy_params()
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    new_params, _, _ = O.apply_updates(
+        params, zeros, O.init_opt_state(params, cfg), cfg)
+    assert float(jnp.max(jnp.abs(new_params["w"]))) < 1.0
+
+
+# --------------------------------------------------------------------------
+# compress
+# --------------------------------------------------------------------------
+def test_compress_round_trip_small_relative_error():
+    rng = np.random.default_rng(0)
+    grads = {"w": jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)}
+    err = C.init_error_buffers(grads)
+    deq, new_err, m = C.compress_decompress(grads, err)
+    assert deq["w"].dtype == grads["w"].dtype
+    rel = float(m["compress_rel_err"])
+    assert 0.0 < rel < 0.02      # int8 with per-tensor scale
+    # error feedback identity: e' = (g + e) - deq
+    np.testing.assert_allclose(
+        np.asarray(new_err["w"]),
+        np.asarray(grads["w"]) - np.asarray(deq["w"]), atol=1e-6)
+
+
+def test_compress_error_feedback_telescopes():
+    g = {"w": jnp.full((32,), 0.003, jnp.float32)}   # below one quantum
+    err = C.init_error_buffers(g)
+    total = np.zeros(32, np.float32)
+    for _ in range(8):
+        deq, err, _ = C.compress_decompress(g, err)
+        total += np.asarray(deq["w"])
+    # accumulated payloads approach the accumulated true gradient
+    np.testing.assert_allclose(total, 8 * 0.003, rtol=0.2)
+
+
+# --------------------------------------------------------------------------
+# end-to-end train step on a smoke-scale model
+# --------------------------------------------------------------------------
+def _setup(config="qwen2.5-14b", **step_kw):
+    from repro.configs import get_smoke
+    from repro.models.model import LM
+
+    lm = LM(get_smoke(config))
+    cfg = O.AdamWConfig(warmup_steps=0)
+    params = lm.init(jax.random.PRNGKey(0))
+    state = T.init_train_state(lm, params, cfg,
+                               compress=step_kw.get("compress"))
+    step = T.build_train_step(lm, cfg, **step_kw)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, get_smoke(config).vocab, (2, 16))
+    batch = {"tokens": jnp.asarray(toks, jnp.int32),
+             "labels": jnp.asarray(np.roll(toks, -1, axis=1), jnp.int32)}
+    return lm, params, state, step, batch
+
+
+@pytest.mark.slow
+def test_train_step_deterministic_loss_and_invariants():
+    _, params, state, step, batch = _setup()
+    p1, s1, m1 = step(params, state, batch)
+    _, params2, state2, step2, _ = _setup()
+    _, _, m2 = step2(params2, state2, batch)
+    assert float(m1["loss"]) == float(m2["loss"])      # fixed seed, same init
+    assert np.isfinite(float(m1["loss"])) and float(m1["loss"]) > 0
+    assert jax.tree.structure(p1) == jax.tree.structure(params)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(params)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+    assert int(s1["adam"]["step"]) == 1
+    # a second step reduces loss on the same (memorizable) batch
+    _, _, m3 = step(p1, s1, batch)
+    assert float(m3["loss"]) < float(m1["loss"])
+
+
+@pytest.mark.slow
+def test_train_step_microbatching_matches_full_batch_loss():
+    _, params, state, step1, batch = _setup(microbatches=1)
+    _, _, m1 = step1(params, state, batch)
+    _, params2, state2, step2, _ = _setup(microbatches=2)
+    _, _, m2 = step2(params2, state2, batch)
+    # mean of per-microbatch token means == full-batch mean (equal sizes)
+    assert float(m2["loss"]) == pytest.approx(float(m1["loss"]), rel=1e-5)
+
+
+@pytest.mark.slow
+def test_train_step_int8_ef_compress_path():
+    _, params, state, step, batch = _setup(compress="int8_ef")
+    assert "err" in state
+    p1, s1, m = step(params, state, batch)
+    assert "err" in s1
+    assert 0.0 <= float(m["compress_rel_err"]) < 0.2
+    # params still move under the compressed gradients
+    delta = max(float(jnp.max(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(p1),
+                                jax.tree.leaves(params)))
+    assert delta > 0
