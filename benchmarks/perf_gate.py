@@ -1,7 +1,7 @@
 """CI perf-regression gate over the ``benchmarks.run`` section record.
 
 ``benchmarks.run`` writes a machine-readable perf record (per-section
-wall-clock, bucketed per configuration) to ``BENCH_PR4.json``; the
+wall-clock, bucketed per configuration) to ``BENCH.json``; the
 repository commits one as the performance baseline.  ``timing_smoke``
 gates only single-cell simulation latency, so a regression in the *batch*
 paths (engine batching, suite runner, figure queries) used to be
@@ -35,15 +35,53 @@ that time *real kernel* wall-clock (``kernels_stream`` /
 ``kernels_attention`` measure achieved GB/s of jitted Pallas kernels)
 are jit-noise-bound rather than simulator-bound — CI skips them via
 ``--skip``.
+
+Structural counter gates (``--obs-trace``)
+------------------------------------------
+Wall-clock ratios catch a path that got *slow*; they cannot catch a path
+that silently lost its sharing structure while staying (barely) inside
+the envelope.  With ``--obs-trace TRACE.jsonl`` (a ``repro.obs`` trace,
+recorded via ``--trace`` on the suite CLI) the gate additionally asserts
+*counter invariants*::
+
+    # cold roster: every profile pass goes through the trace memo —
+    # one StreamProfile scan per unique geometry, never more
+    python -m benchmarks.perf_gate --obs-trace cold.jsonl \
+        --obs-require profile.scan==profile.geom
+
+    # warm rerun: pure store recall — zero cold recalls, zero sims
+    python -m benchmarks.perf_gate --obs-trace warm.jsonl \
+        --obs-require store.recall.cold==0 \
+        --obs-require engine.sim.run==0 --obs-require profile.scan==0
+
+    # the per-stage spans must cover the end-to-end wall-clock
+    python -m benchmarks.perf_gate --obs-trace cold.jsonl \
+        --obs-min-coverage suite.registry+suite.run=0.9
+
+``--obs-require`` takes ``NAME OP NAME-or-NUMBER`` (operators ``==``
+``!=`` ``<=`` ``>=`` ``<`` ``>``; a name resolves to the merged counter
+value, missing counters read as 0; ``span:NAME`` resolves to that span's
+total seconds).  ``--obs-min-coverage A+B=F`` requires the summed span
+totals of ``A``/``B`` to cover at least fraction ``F`` of the trace's
+end-to-end wall — the ROADMAP item 3 target ("one profile pass per
+unique geometry", "roster bounded by recall") expressed as a regression
+gate instead of a hope.  With ``--obs-trace`` given, ``--current`` is
+optional, so CI can run the counter gate on a trace alone.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import operator
 import sys
 
-DEFAULT_BASELINE = "BENCH_PR4.json"
+DEFAULT_BASELINE = "BENCH.json"
+# The perf record lived at BENCH_PR4.json before it became rolling; both
+# spellings load (with a stderr note) so older branches/scripts keep
+# working.
+_BASELINE_ALIASES = {"BENCH.json": "BENCH_PR4.json",
+                     "BENCH_PR4.json": "BENCH.json"}
 DEFAULT_CONFIG = "fast-refs20000-vectorized"
 
 
@@ -51,10 +89,28 @@ def load_sections(path: str, config: str) -> dict[str, float]:
     return _load_bucket(path, config)[0]
 
 
+def _open_record(path: str) -> dict:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        alias = _BASELINE_ALIASES.get(path)
+        if alias is None:
+            raise
+        try:
+            with open(alias) as f:
+                record = json.load(f)
+        except FileNotFoundError:
+            raise SystemExit(
+                f"{path}: not found (nor its former name {alias})")
+        print(f"# perf_gate: {path} not found; loaded {alias} "
+              f"(renamed baseline)", file=sys.stderr)
+        return record
+
+
 def _load_bucket(path: str, config: str) -> tuple[dict[str, float], float]:
     """(per-section seconds, meta calibration seconds or 0.0)."""
-    with open(path) as f:
-        record = json.load(f)
+    record = _open_record(path)
     bucket = record.get("runs", {}).get(config)
     if bucket is None:
         raise SystemExit(
@@ -112,15 +168,89 @@ def gate(baseline: dict[str, float], current: dict[str, float], *,
     return failures
 
 
+# --------------------------------------------------------------------------
+# Structural counter gates over a repro.obs trace
+# --------------------------------------------------------------------------
+_OBS_OPS = {
+    "==": operator.eq, "!=": operator.ne, "<=": operator.le,
+    ">=": operator.ge, "<": operator.lt, ">": operator.gt,
+}
+
+
+def parse_require(expr: str) -> tuple[str, str, str]:
+    """``"profile.scan==profile.geom"`` -> ``(lhs, op, rhs)``."""
+    for op in ("==", "!=", "<=", ">=", "<", ">"):  # 2-char ops first
+        if op in expr:
+            lhs, rhs = expr.split(op, 1)
+            lhs, rhs = lhs.strip(), rhs.strip()
+            if lhs and rhs:
+                return lhs, op, rhs
+    raise SystemExit(
+        f"bad --obs-require {expr!r}; expected NAME OP NAME-or-NUMBER "
+        f"with OP in {sorted(_OBS_OPS)}")
+
+
+def _resolve(rep, token: str) -> float:
+    """Numeric literal, ``span:NAME`` total seconds, or counter value."""
+    try:
+        return float(token)
+    except ValueError:
+        pass
+    if token.startswith("span:"):
+        return rep.span_total(token[len("span:"):])
+    return rep.counter(token, 0.0)
+
+
+def obs_gate(rep, requires: list[str], coverages: list[str], *,
+             out=sys.stdout) -> list[str]:
+    """Check counter invariants + span coverage; return failed checks.
+
+    ``rep`` is a :class:`repro.obs.report.ObsReport`; ``requires`` are
+    raw ``--obs-require`` expressions, ``coverages`` raw
+    ``--obs-min-coverage`` specs (``NAME[+NAME...]=FRACTION``).
+    """
+    failures: list[str] = []
+    for expr in requires:
+        lhs, op, rhs = parse_require(expr)
+        lv, rv = _resolve(rep, lhs), _resolve(rep, rhs)
+        ok = _OBS_OPS[op](lv, rv)
+        verdict = "ok" if ok else "VIOLATED"
+        print(f"obs require  {expr:44s} [{lv:g} {op} {rv:g}]  {verdict}",
+              file=out)
+        if not ok:
+            failures.append(expr)
+    for spec in coverages:
+        names, _, frac_text = spec.partition("=")
+        try:
+            frac = float(frac_text)
+        except ValueError:
+            raise SystemExit(
+                f"bad --obs-min-coverage {spec!r}; expected "
+                f"NAME[+NAME...]=FRACTION")
+        total = sum(rep.span_total(n.strip())
+                    for n in names.split("+") if n.strip())
+        cov = total / rep.wall_s if rep.wall_s else 0.0
+        ok = cov >= frac
+        verdict = "ok" if ok else "VIOLATED"
+        print(f"obs coverage {names:44s} [{total:.3f}s / "
+              f"{rep.wall_s:.3f}s = {cov:.1%} >= {frac:.0%}]  {verdict}",
+              file=out)
+        if not ok:
+            failures.append(spec)
+    return failures
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m benchmarks.perf_gate",
         description="fail CI when a benchmarks.run section's wall-clock "
                     "regresses vs the committed perf record")
     ap.add_argument("--baseline", default=DEFAULT_BASELINE,
-                    help=f"committed perf record (default {DEFAULT_BASELINE})")
-    ap.add_argument("--current", required=True,
-                    help="perf record written by the CI benchmarks.run")
+                    help=f"committed perf record (default {DEFAULT_BASELINE}; "
+                         "the former BENCH_PR4.json name still loads)")
+    ap.add_argument("--current", default=None,
+                    help="perf record written by the CI benchmarks.run "
+                         "(required unless --obs-trace alone is gated)")
     ap.add_argument("--config", default=DEFAULT_CONFIG,
                     help=f"runs bucket to compare (default {DEFAULT_CONFIG})")
     ap.add_argument("--max-ratio", type=float, default=2.0,
@@ -132,22 +262,67 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--skip", default="", metavar="S[,S]",
                     help="comma list of sections to exclude (e.g. the "
                          "machine-bound kernel wall-clock sections)")
+    ap.add_argument("--obs-trace", default=None, metavar="TRACE.jsonl",
+                    action="append",
+                    help="repro.obs trace file(s) to merge and gate "
+                         "counter invariants over (repeatable)")
+    ap.add_argument("--obs-require", default=[], action="append",
+                    metavar="EXPR",
+                    help="counter invariant, e.g. store.recall.cold==0 "
+                         "or profile.scan<=profile.geom (repeatable; "
+                         "needs --obs-trace)")
+    ap.add_argument("--obs-min-coverage", default=[], action="append",
+                    metavar="NAME[+NAME..]=FRACTION",
+                    help="require the named spans' summed total to cover "
+                         "at least FRACTION of the trace wall-clock "
+                         "(repeatable; needs --obs-trace)")
     args = ap.parse_args(argv)
 
-    skip = {s.strip() for s in args.skip.split(",") if s.strip()}
-    base_sections, base_cal = _load_bucket(args.baseline, args.config)
-    cur_sections, cur_cal = _load_bucket(args.current, args.config)
-    baseline = {k: v for k, v in base_sections.items() if k not in skip}
-    current = {k: v for k, v in cur_sections.items() if k not in skip}
-    failures = gate(baseline, current, max_ratio=args.max_ratio,
-                    min_seconds=args.min_seconds,
-                    factor=speed_factor(base_cal, cur_cal))
+    if (args.obs_require or args.obs_min_coverage) and not args.obs_trace:
+        ap.error("--obs-require/--obs-min-coverage need --obs-trace")
+    if args.current is None and not args.obs_trace:
+        ap.error("--current is required (unless gating --obs-trace alone)")
+
+    failures: list[str] = []
+    current: dict[str, float] = {}
+    if args.current is not None:
+        skip = {s.strip() for s in args.skip.split(",") if s.strip()}
+        base_sections, base_cal = _load_bucket(args.baseline, args.config)
+        cur_sections, cur_cal = _load_bucket(args.current, args.config)
+        baseline = {k: v for k, v in base_sections.items() if k not in skip}
+        current = {k: v for k, v in cur_sections.items() if k not in skip}
+        failures += gate(baseline, current, max_ratio=args.max_ratio,
+                         min_seconds=args.min_seconds,
+                         factor=speed_factor(base_cal, cur_cal))
+
+    obs_failures: list[str] = []
+    if args.obs_trace:
+        from repro.obs.report import aggregate
+
+        rep = aggregate(args.obs_trace)
+        obs_failures = obs_gate(rep, args.obs_require,
+                                args.obs_min_coverage)
+        failures += obs_failures
+
     if failures:
-        print(f"perf gate FAILED: {', '.join(failures)} regressed "
-              f"beyond {args.max_ratio:g}x", file=sys.stderr)
+        wall = [f for f in failures if f not in obs_failures]
+        parts = []
+        if wall:
+            parts.append(f"{', '.join(wall)} regressed beyond "
+                         f"{args.max_ratio:g}x")
+        if obs_failures:
+            parts.append(f"counter invariant(s) violated: "
+                         f"{'; '.join(obs_failures)}")
+        print(f"perf gate FAILED: {'; '.join(parts)}", file=sys.stderr)
         return 1
-    print(f"perf gate OK: {len(current)} section(s) within "
-          f"{args.max_ratio:g}x of baseline", file=sys.stderr)
+    checked = []
+    if args.current is not None:
+        checked.append(f"{len(current)} section(s) within "
+                       f"{args.max_ratio:g}x of baseline")
+    if args.obs_trace:
+        checked.append(f"{len(args.obs_require) + len(args.obs_min_coverage)}"
+                       f" counter invariant(s) hold")
+    print(f"perf gate OK: {'; '.join(checked)}", file=sys.stderr)
     return 0
 
 

@@ -37,7 +37,7 @@ Sections map 1:1 to paper artifacts:
 - kernels  — Pallas kernel microbench + v5e roofline bounds
 
 Every run also writes a machine-readable perf record (default
-``BENCH_PR4.json``): per-section wall-clock + row counts, the resolved
+``BENCH.json``): per-section wall-clock + row counts, the resolved
 backend and batch mode, and engine cell statistics.  The file is
 merge-updated — keys this driver does not own (e.g. a committed baseline
 comparison block) are preserved — so the perf trajectory is trackable
@@ -128,7 +128,7 @@ def main() -> None:
     ap.add_argument("--backend", choices=BACKENDS, default=None,
                     help="cache-simulation implementation; default: "
                          "$REPRO_SIM_BACKEND or 'vectorized'")
-    ap.add_argument("--bench-json", default="BENCH_PR4.json", metavar="PATH",
+    ap.add_argument("--bench-json", default="BENCH.json", metavar="PATH",
                     help="perf-record output path ('' disables)")
     args = ap.parse_args()
 

@@ -42,6 +42,8 @@ from typing import Callable
 
 import numpy as np
 
+from repro import obs
+
 __all__ = [
     "OperandSpec",
     "GridCapture",
@@ -201,6 +203,15 @@ def walk(cap: GridCapture, *, count_only: bool = False,
     standalone walk (the differential gate in
     ``tests/test_capture_model.py``).
     """
+    with obs.span("capture.walk", kernel=cap.name, count_only=count_only):
+        res = _walk(cap, count_only=count_only, bases=bases)
+    obs.count("capture.walk.calls")
+    obs.count("capture.walk.refs", res.refs)
+    return res
+
+
+def _walk(cap: GridCapture, *, count_only: bool,
+          bases: dict[str, int] | None) -> CaptureResult:
     if bases is None:
         base: dict[str, int] = {}
         cursor = 0

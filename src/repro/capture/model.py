@@ -537,9 +537,15 @@ def capture_model(fn, args, *, name: str = "model",
     """
     import jax
 
-    closed = jax.make_jaxpr(fn)(*args)
-    walker = _Walker(stream_min_elems)
-    walker.walk_jaxpr(closed.jaxpr, {})
+    from repro import obs
+
+    with obs.span("capture.model.trace", model=name):
+        closed = jax.make_jaxpr(fn)(*args)
+    with obs.span("capture.model.walk_jaxpr", model=name):
+        walker = _Walker(stream_min_elems)
+        walker.walk_jaxpr(closed.jaxpr, {})
+    obs.count("capture.model.captures")
+    obs.count("capture.model.ops", len(walker.ops))
     return ModelCapture(
         name=name, ops=tuple(walker.ops),
         flops=count_flops(closed.jaxpr),

@@ -71,6 +71,8 @@ import zlib
 
 import numpy as np
 
+from repro import obs
+
 from .cachesim import (
     WORDS_PER_LINE,
     HierarchyConfig,
@@ -96,6 +98,12 @@ class StreamProfile:
 
     def __init__(self, lines: np.ndarray) -> None:
         n = int(lines.size)
+        # Structural counters (see docs/observability.md): every profile
+        # construction is one ``profile.scan``; the memo's job is to keep
+        # this equal to ``profile.geom`` (unique geometries), which the CI
+        # counter gate asserts.
+        obs.count("profile.scan")
+        obs.count("profile.refs", n)
         self.n = n
         if n == 0:
             self.keep = np.zeros(0, dtype=bool)
@@ -321,8 +329,12 @@ class _TraceMemo:
     def profile(self, prefix: tuple) -> StreamProfile:
         p = self.profiles.get(prefix)
         if p is None:
-            p = StreamProfile(self.stream(prefix))
+            obs.count("profile.geom")
+            with obs.span("sim.profile", depth=len(prefix)):
+                p = StreamProfile(self.stream(prefix))
             self.profiles[prefix] = p
+        else:
+            obs.count("profile.reuse")
         return p
 
     def results(self, prefix: tuple, sets: int,
@@ -339,11 +351,15 @@ class _TraceMemo:
             got = self.levels.get(prefix + ((sets, w),))
             if got is not None:
                 out[w] = got
+                obs.count("node.reuse")
             else:
                 missing.append(w)
         if missing:
+            obs.count("node.compute", len(missing))
             stream = self.stream(prefix)
-            masks = _replay_ways(self.profile(prefix), sets, missing)
+            with obs.span("sim.scan", sets=sets, ways=len(missing),
+                          depth=len(prefix)):
+                masks = _replay_ways(self.profile(prefix), sets, missing)
             for w in missing:
                 mask = masks[w]
                 res = (int(mask.sum()), stream[~mask])
@@ -364,11 +380,15 @@ class _TraceMemo:
         key = prefix + (node,)
         got = self.levels.get(key)
         if got is None:
+            obs.count("pf.replay")
             _, sets, ways, degree, streams = node
-            hits, miss_stream, issued, useful = _pf_l2_replay(
-                self.stream(prefix), sets, ways, degree, streams)
+            with obs.span("sim.pf_replay", sets=sets, ways=ways):
+                hits, miss_stream, issued, useful = _pf_l2_replay(
+                    self.stream(prefix), sets, ways, degree, streams)
             self.levels[key] = got = (hits, miss_stream)
             self.pf_extras[key] = (issued, useful)
+        else:
+            obs.count("pf.reuse")
         return got[0], got[1], *self.pf_extras[key]
 
 
@@ -389,13 +409,17 @@ def _memo_for(addr: np.ndarray) -> _TraceMemo:
                 if memo.crc == _fingerprint(addr):
                     if i != len(_MEMOS) - 1:
                         _MEMOS.append(_MEMOS.pop(i))  # refresh LRU slot
+                    obs.count("memo.hit")
                     return memo
                 del _MEMOS[i]  # array was mutated in place: recompute
+                obs.count("memo.invalidate")
                 break
+        obs.count("memo.miss")
         memo = _TraceMemo(addr)
         _MEMOS.append(memo)
         while len(_MEMOS) > _MEMO_MAX:
             _MEMOS.pop(0)
+            obs.count("memo.evict")
         return memo
 
 
@@ -508,7 +532,8 @@ def simulate_batch(
     level_counts: list[list[tuple[int, int]]] = [[] for _ in plans]
     pf_meta: list[tuple[int, int]] = [(0, 0)] * len(plans)
 
-    with memo.lock:
+    with obs.span("sim.batch", configs=len(configs), refs=int(addr.size)), \
+            memo.lock:
         lines_touched = memo.profile(()).distinct
 
         def walk(prefix: tuple, items: list[tuple[int, tuple]]) -> None:

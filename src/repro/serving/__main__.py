@@ -48,12 +48,28 @@ def build_parser() -> argparse.ArgumentParser:
                     metavar="1,4,16,...", help="core sweep")
     ap.add_argument("--list", action="store_true",
                     help="print the scenario roster and exit")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="record a repro.obs span/counter trace (JSONL); "
+                         "read it with `python -m repro.obs report FILE`")
     return ap
 
 
 def main(argv: list[str] | None = None) -> int:
     args = build_parser().parse_args(argv)
 
+    from repro import obs
+
+    if args.trace:
+        obs.enable(args.trace)
+    try:
+        with obs.span("serving.run", scenario=args.scenario):
+            return _main(args)
+    finally:
+        if args.trace:
+            obs.disable()
+
+
+def _main(args: argparse.Namespace) -> int:
     if args.list:
         for s in SCENARIOS.values():
             print(f"{s.name:28s} {s.kernel:9s} "

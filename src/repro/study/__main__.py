@@ -69,6 +69,9 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--format", choices=("csv", "json"), default="csv")
     ap.add_argument("--out", default=None,
                     help="output path (default: stdout)")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="record a repro.obs span/counter trace (JSONL); "
+                         "read it with `python -m repro.obs report FILE`")
     ap.add_argument("--stats", action="store_true",
                     help="print engine hit/miss stats to stderr")
     return ap
@@ -96,6 +99,19 @@ def _trace_tables(study: Study, sections: list[str]) -> list[StudyResult]:
 def main(argv: list[str] | None = None) -> int:
     args = build_parser().parse_args(argv)
 
+    from repro import obs
+
+    if args.trace:
+        obs.enable(args.trace)
+    try:
+        with obs.span("study.run", substrate=args.substrate):
+            return _main(args)
+    finally:
+        if args.trace:
+            obs.disable()
+
+
+def _main(args: argparse.Namespace) -> int:
     trace_only = {"--sections": args.sections != "characterize",
                   "--workloads": bool(args.workloads),
                   "--variants": args.variants != 1,

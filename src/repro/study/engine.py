@@ -60,6 +60,7 @@ from concurrent.futures import Executor, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, Iterable
 
+from repro import obs
 from repro.core import cachesim
 from repro.core.cachesim import HierarchyConfig, SimResult
 from repro.core.tracegen import TraceSpec, Workload
@@ -170,10 +171,14 @@ class SimEngine:
         key = (workload.name, cores, seed)
         spec = self._traces.get(key)
         if spec is None:
-            spec = workload.trace(cores, seed=seed)
+            obs.count("engine.trace.run")
+            with obs.span("engine.trace", workload=workload.name,
+                          cores=cores):
+                spec = workload.trace(cores, seed=seed)
             self._traces[key] = spec
             self.stats.trace_runs += 1
         else:
+            obs.count("engine.trace.hit")
             self.stats.trace_hits += 1
         return spec
 
@@ -191,10 +196,14 @@ class SimEngine:
         sim = self._sims.get(key)
         if sim is None:
             spec = self.trace(workload, cores, seed=seed)
-            sim = self._run_cell(workload, spec, hierarchy)
+            obs.count("engine.sim.run")
+            with obs.span("engine.cell", workload=workload.name,
+                          cores=cores):
+                sim = self._run_cell(workload, spec, hierarchy)
             self._sims[key] = sim
             self.stats.sim_runs += 1
         else:
+            obs.count("engine.sim.hit")
             self.stats.sim_hits += 1
         return sim
 
@@ -279,8 +288,10 @@ class SimEngine:
                 groups.setdefault(c, []).append((key, h))
 
             def run(c: int, batch: list[tuple[CellKey, HierarchyConfig]]):
-                return self._run_group(workload, specs[c],
-                                       [h for _, h in batch])
+                with obs.span("engine.batch", workload=workload.name,
+                              cores=c, cells=len(batch)):
+                    return self._run_group(workload, specs[c],
+                                           [h for _, h in batch])
 
             if len(groups) == 1 and executor is None:
                 (c, batch), = groups.items()
@@ -303,7 +314,10 @@ class SimEngine:
                     if own_pool:
                         pool.shutdown()
             self.stats.sim_runs += len(missing)
+            obs.count("engine.sim.run", len(missing))
         self.stats.sim_hits += hits
+        if hits:
+            obs.count("engine.sim.hit", hits)
         return [self._sims[key] for key in keys]
 
     def sweep(

@@ -55,13 +55,19 @@ FAST_REFS = 20_000
 
 
 def parse_sections(text: str) -> tuple[str, ...]:
-    """Comma list of roster sections -> validated tuple."""
-    sections = tuple(s.strip() for s in text.split(",") if s.strip())
+    """Comma list of roster sections -> validated tuple.
+
+    ``table3`` (the default roster's paper name) is accepted as an alias
+    for the plain roster — it adds no columns and does not change store
+    keys, so ``--sections table3`` is exactly ``python -m repro.suite``.
+    """
+    sections = tuple(s.strip() for s in text.split(",") if s.strip()
+                     and s.strip() != "table3")
     unknown = set(sections) - set(SECTION_COLUMNS)
     if unknown:
         raise argparse.ArgumentTypeError(
             f"unknown section(s) {sorted(unknown)}; "
-            f"choose from {sorted(SECTION_COLUMNS)}")
+            f"choose from {sorted(SECTION_COLUMNS) + ['table3']}")
     return sections
 
 
@@ -123,8 +129,17 @@ def build_parser() -> argparse.ArgumentParser:
                     help="exit 2 if any captured kernel's assigned class "
                          "diverges from its expected class")
     ap.add_argument("--format", choices=("csv", "json"), default="csv")
+    ap.add_argument("--json", action="store_const", dest="format",
+                    const="json",
+                    help="shorthand for --format json (mechanically "
+                         "diffable roster/histogram for CI artifacts)")
     ap.add_argument("--out", default=None,
                     help="output path (default: stdout)")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="record a repro.obs span/counter trace (JSONL, "
+                         "appended; worker processes merge into the same "
+                         "file); read it with `python -m repro.obs "
+                         "report FILE`")
     ap.add_argument("--stats", action="store_true",
                     help="print store/engine hit-miss stats to stderr")
     return ap
@@ -134,6 +149,22 @@ def main(argv: list[str] | None = None) -> int:
     args = build_parser().parse_args(argv)
     refs = args.refs if args.refs is not None else (
         FAST_REFS if args.fast else DEFAULT_REFS)
+
+    from repro import obs
+
+    if args.trace:
+        # Must happen before the runner exists: enable() exports
+        # REPRO_TRACE so --processes workers append to the same file.
+        obs.enable(args.trace)
+    try:
+        return _main(args, refs)
+    finally:
+        if args.trace:
+            obs.disable()  # flush counters, close the stream
+
+
+def _main(args: argparse.Namespace, refs: int) -> int:
+    from repro import obs
 
     if args.gc:
         from .registry import LEGACY_SCHEMA, SUITE_SCHEMA
@@ -152,8 +183,10 @@ def main(argv: list[str] | None = None) -> int:
         print("# --filter only applies to the models roster "
               "(--sections models)", file=sys.stderr)
         return 2
-    registry = registry_for(refs=refs, sections=args.sections,
-                            only=args.filter)
+    with obs.span("suite.registry", refs=refs,
+                  sections=",".join(args.sections) or "-"):
+        registry = registry_for(refs=refs, sections=args.sections,
+                                only=args.filter)
 
     if args.list:
         for e in registry:
@@ -171,8 +204,13 @@ def main(argv: list[str] | None = None) -> int:
     runner = SuiteRunner(registry, seed=args.seed, cores=args.cores,
                          backend=args.backend, store=store,
                          processes=args.processes, sections=args.sections)
-    tables = [runner.roster(), runner.histogram()]
-    emit_tables(tables, fmt=args.format, out=args.out)
+    # suite.run is the CLI's end-to-end stage: the obs report's per-stage
+    # total (suite.entry + emission) should land within 10% of it.
+    with obs.span("suite.run", entries=len(registry),
+                  sections=",".join(args.sections) or "-",
+                  processes=args.processes):
+        tables = [runner.roster(), runner.histogram()]
+        emit_tables(tables, fmt=args.format, out=args.out)
 
     if args.stats:
         print(f"# store: {runner.stats.as_dict()} "

@@ -37,9 +37,11 @@ from __future__ import annotations
 
 import functools
 import multiprocessing
+import time
 from concurrent.futures import ProcessPoolExecutor
 from dataclasses import dataclass
 
+from repro import obs
 from repro.core import cachesim, classify
 from repro.core.sweep import CORE_SWEEP
 from repro.study.engine import SimEngine
@@ -110,11 +112,24 @@ def _worker_runner(refs: int, seed: int, cores: tuple[int, ...],
 
 
 def _characterize_entry(task: tuple) -> tuple:
-    """Process-pool task: one entry's roster row, by name."""
+    """Process-pool task: one entry's roster row, by name.
+
+    Workers inherit the parent's trace sink through ``REPRO_TRACE`` (set
+    by :func:`repro.obs.enable` before the pool spawns), so their spans
+    land in the same stream, pid-tagged.  Counters are flushed per task —
+    pool busy time aggregates across workers no matter how the pool is
+    torn down.
+    """
     name, refs, seed, cores, backend, sections = task
-    runner = _worker_runner(refs, seed, cores, backend, sections)
-    entry = next(e for e in runner.registry if e.name == name)
-    return runner._characterize(entry)
+    t0 = time.perf_counter()
+    with obs.span("suite.worker.entry", entry=name):
+        runner = _worker_runner(refs, seed, cores, backend, sections)
+        entry = next(e for e in runner.registry if e.name == name)
+        row = runner._characterize(entry)
+    obs.count("pool.tasks")
+    obs.count("pool.busy_s", time.perf_counter() - t0)
+    obs.flush()
+    return row
 
 
 class SuiteRunner:
@@ -159,6 +174,10 @@ class SuiteRunner:
 
     # ---- characterization ------------------------------------------------
     def _characterize(self, entry: SuiteEntry) -> tuple:
+        with obs.span("suite.entry", entry=entry.name, source=entry.source):
+            return self._characterize_inner(entry)
+
+    def _characterize_inner(self, entry: SuiteEntry) -> tuple:
         w = entry.workload
         spatial, temporal = self.study.locality(w)
         m = self.study.metrics(w)
@@ -250,17 +269,26 @@ class SuiteRunner:
                                  sections=self.sections)
 
     def _recall(self, entry: SuiteEntry) -> tuple | None:
-        """Store lookup for one entry; caches and counts on hit."""
+        """Store lookup for one entry; caches and counts on hit.
+
+        A record that parses but has the wrong shape (schema mismatch,
+        drifted columns, missing/short row) is treated exactly like a
+        miss — the entry recomputes and the fresh row overwrites it.
+        """
         if self.store is None:
             return None
         rec = self.store.get(self._fingerprint(entry))
         if (rec is not None
                 and rec.get("schema", LEGACY_SCHEMA) == SUITE_SCHEMA
-                and rec.get("columns") == list(self.columns)):
+                and rec.get("columns") == list(self.columns)
+                and isinstance(rec.get("row"), list)
+                and len(rec["row"]) == len(self.columns)):
+            obs.count("store.recall.warm")
             row = tuple(rec["row"])
             self._rows[entry.name] = row
             self.stats.recalled += 1
             return row
+        obs.count("store.recall.cold")
         return None
 
     def _persist(self, entry: SuiteEntry, row: tuple) -> None:
@@ -333,12 +361,19 @@ class SuiteRunner:
             # process can deadlock a child on an inherited lock.  Workers
             # rebuild everything from the pickled task tuple anyway.
             ctx = multiprocessing.get_context("spawn")
-            with ProcessPoolExecutor(
-                    max_workers=min(processes, len(remote)),
-                    mp_context=ctx) as pool:
+            n_workers = min(processes, len(remote))
+            t0 = time.perf_counter()
+            with obs.span("suite.pool", entries=len(remote),
+                          processes=n_workers), \
+                    ProcessPoolExecutor(max_workers=n_workers,
+                                        mp_context=ctx) as pool:
                 for entry, row in zip(remote,
                                       pool.map(_characterize_entry, tasks)):
                     self._persist(entry, tuple(row))
+            # pool.busy_s (accumulated in workers) over workers x wall is
+            # the fleet busy fraction the obs report derives
+            obs.count("pool.wall_s", time.perf_counter() - t0)
+            obs.count("pool.workers", n_workers)
         for entry in local:
             self._persist(entry, self._characterize(entry))
 

@@ -11,6 +11,12 @@ values, and JSON round-trips them losslessly).
 Layout: ``<root>/<key[:2]>/<key>.json``; writes are atomic
 (tmp + ``os.replace``) so concurrent runners can share a store.  The root
 defaults to ``$REPRO_SUITE_STORE`` or ``~/.cache/repro-suite``.
+
+The store is a cache, so a damaged record is never fatal: a record that
+is truncated, unreadable, or not a JSON object is *skipped* (one
+``repro.obs`` warning line + a ``store.corrupt`` counter bump) and the
+entry recomputes — the same result as a cache miss, one simulation
+slower.
 """
 
 from __future__ import annotations
@@ -19,6 +25,8 @@ import json
 import os
 import tempfile
 from pathlib import Path
+
+from repro import obs
 
 __all__ = ["ResultStore", "default_store_root"]
 
@@ -44,12 +52,27 @@ class ResultStore:
     def get(self, key: str) -> dict | None:
         path = self._path(key)
         try:
-            with open(path) as f:
-                return json.load(f)
+            with open(path, encoding="utf-8") as f:
+                rec = json.load(f)
         except FileNotFoundError:
             return None
-        except json.JSONDecodeError:
-            return None  # truncated/corrupt record: treat as missing
+        except (OSError, ValueError, UnicodeDecodeError) as e:
+            # Truncated/corrupt/unreadable record: skip and recompute
+            # (JSONDecodeError is a ValueError).  Warn once per record so
+            # a rotting store is visible without spamming the roster run.
+            self._corrupt(path, type(e).__name__)
+            return None
+        if not isinstance(rec, dict):
+            self._corrupt(path, f"non-object record ({type(rec).__name__})")
+            return None
+        return rec
+
+    @staticmethod
+    def _corrupt(path: Path, why: str) -> None:
+        obs.count("store.corrupt")
+        obs.warn_once(
+            f"store-corrupt:{path}",
+            f"skipping corrupt store record {path} ({why}); recomputing")
 
     def put(self, key: str, record: dict) -> None:
         path = self._path(key)

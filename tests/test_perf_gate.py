@@ -123,3 +123,132 @@ class TestSpeedNormalization:
         _, cal = perf_gate._load_bucket(perf_gate.DEFAULT_BASELINE,
                                         perf_gate.DEFAULT_CONFIG)
         assert cal > 0.0
+
+
+class TestBaselineAlias:
+    """BENCH.json <-> BENCH_PR4.json: either spelling loads the record."""
+
+    RECORD = {"runs": {"cfg": {"sections": {"a": {"seconds": 1.0,
+                                                  "rows": 1}}}}}
+
+    def test_old_name_resolves_to_new_record(self, tmp_path, monkeypatch,
+                                             capsys):
+        monkeypatch.chdir(tmp_path)
+        (tmp_path / "BENCH.json").write_text(json.dumps(self.RECORD))
+        sections = perf_gate.load_sections("BENCH_PR4.json", "cfg")
+        assert sections == {"a": 1.0}
+        assert "renamed baseline" in capsys.readouterr().err
+
+    def test_new_name_resolves_to_old_record(self, tmp_path, monkeypatch):
+        monkeypatch.chdir(tmp_path)
+        (tmp_path / "BENCH_PR4.json").write_text(json.dumps(self.RECORD))
+        assert perf_gate.load_sections("BENCH.json", "cfg") == {"a": 1.0}
+
+    def test_both_names_missing_is_a_clear_error(self, tmp_path,
+                                                 monkeypatch):
+        monkeypatch.chdir(tmp_path)
+        with pytest.raises(SystemExit, match="nor its former name"):
+            perf_gate.load_sections("BENCH.json", "cfg")
+
+    def test_unaliased_path_raises_file_not_found(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            perf_gate.load_sections(str(tmp_path / "other.json"), "cfg")
+
+
+class TestObsGate:
+    """Structural counter gates over a repro.obs trace."""
+
+    @staticmethod
+    def _rep():
+        from repro.obs.report import aggregate_events
+
+        return aggregate_events([
+            {"ev": "span", "name": "suite.run", "pid": 1, "tid": 1,
+             "ts": 0, "dur": 9_000_000},
+            {"ev": "span", "name": "suite.registry", "pid": 1, "tid": 1,
+             "ts": 9_000_000, "dur": 1_000_000},
+            {"ev": "counters", "pid": 1, "ts": 0,
+             "counters": {"profile.scan": 42, "profile.geom": 42,
+                          "store.recall.cold": 2}},
+        ])
+
+    def test_parse_require(self):
+        assert perf_gate.parse_require("a==b") == ("a", "==", "b")
+        assert perf_gate.parse_require("a <= 3") == ("a", "<=", "3")
+        assert perf_gate.parse_require("x<y") == ("x", "<", "y")
+        assert perf_gate.parse_require("n!=0") == ("n", "!=", "0")
+        with pytest.raises(SystemExit, match="bad --obs-require"):
+            perf_gate.parse_require("nonsense")
+        with pytest.raises(SystemExit, match="bad --obs-require"):
+            perf_gate.parse_require("==3")
+
+    def test_requires_pass_and_fail(self):
+        rep = self._rep()
+        out = io.StringIO()
+        fails = perf_gate.obs_gate(
+            rep, ["profile.scan==profile.geom", "store.recall.cold<=2",
+                  "missing.counter==0"], [], out=out)
+        assert fails == []
+        fails = perf_gate.obs_gate(rep, ["store.recall.cold==0"], [],
+                                   out=out)
+        assert fails == ["store.recall.cold==0"]
+        assert "VIOLATED" in out.getvalue()
+
+    def test_span_token_resolves_total_seconds(self):
+        rep = self._rep()
+        out = io.StringIO()
+        assert perf_gate.obs_gate(
+            rep, ["span:suite.run>=8", "span:suite.run<=10"], [],
+            out=out) == []
+        assert perf_gate.obs_gate(
+            rep, ["span:absent==0"], [], out=out) == []
+
+    def test_coverage_pass_and_fail(self):
+        rep = self._rep()  # wall 10s; suite.run 9s + suite.registry 1s
+        out = io.StringIO()
+        assert perf_gate.obs_gate(
+            rep, [], ["suite.registry+suite.run=0.95"], out=out) == []
+        fails = perf_gate.obs_gate(rep, [], ["suite.registry=0.5"],
+                                   out=out)
+        assert fails == ["suite.registry=0.5"]
+        with pytest.raises(SystemExit, match="bad --obs-min-coverage"):
+            perf_gate.obs_gate(rep, [], ["suite.run=lots"], out=out)
+
+    def test_cli_obs_trace_alone(self, tmp_path):
+        trace = tmp_path / "t.jsonl"
+        lines = [
+            json.dumps({"ev": "span", "name": "suite.run", "pid": 1,
+                        "tid": 1, "ts": 0, "dur": 5_000_000}),
+            json.dumps({"ev": "counters", "pid": 1, "ts": 0,
+                        "counters": {"store.recall.cold": 0,
+                                     "engine.sim.run": 0}}),
+        ]
+        trace.write_text("\n".join(lines) + "\n")
+        args = ["--obs-trace", str(trace),
+                "--obs-require", "store.recall.cold==0",
+                "--obs-require", "engine.sim.run==0",
+                "--obs-min-coverage", "suite.run=0.9"]
+        assert perf_gate.main(args) == 0
+        assert perf_gate.main(["--obs-trace", str(trace),
+                               "--obs-require", "engine.sim.run>0"]) == 1
+
+    def test_cli_flag_validation(self, tmp_path):
+        with pytest.raises(SystemExit):  # obs flags need --obs-trace
+            perf_gate.main(["--obs-require", "a==0"])
+        with pytest.raises(SystemExit):  # nothing to gate at all
+            perf_gate.main([])
+
+    def test_cli_wall_and_obs_gates_combine(self, tmp_path):
+        base, cur = tmp_path / "base.json", tmp_path / "cur.json"
+        base.write_text(json.dumps(_record({"a": 2.0})))
+        cur.write_text(json.dumps(_record({"a": 2.5})))
+        trace = tmp_path / "t.jsonl"
+        trace.write_text(json.dumps(
+            {"ev": "counters", "pid": 1, "ts": 0,
+             "counters": {"store.recall.cold": 1}}) + "\n")
+        ok = ["--baseline", str(base), "--current", str(cur),
+              "--config", "cfg", "--obs-trace", str(trace),
+              "--obs-require", "store.recall.cold<=1"]
+        assert perf_gate.main(ok) == 0
+        bad = ok[:-1] + ["store.recall.cold==0"]
+        assert perf_gate.main(bad) == 1

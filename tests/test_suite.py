@@ -242,6 +242,53 @@ class TestRunner:
         for key in keys:
             assert store.get(key)["schema"] == SUITE_SCHEMA
 
+    def test_corrupt_record_injection_recomputes(self, tmp_path, capsys):
+        """A truncated store record is skipped (counted + warned), the
+        entry recomputes, and the rewrite heals the store."""
+        from repro import obs
+
+        store = ResultStore(tmp_path)
+        r1 = SuiteRunner(_tiny_registry(), cores=CORES,
+                         store=store).roster()
+
+        # truncate one record mid-object, as a crashed writer would
+        victim = sorted(tmp_path.glob("*/*.json"))[0]
+        victim.write_text(victim.read_text()[:17])
+
+        obs.reset_counters()
+        second = SuiteRunner(_tiny_registry(), cores=CORES, store=store)
+        r2 = second.roster()
+        assert r2.to_csv() == r1.to_csv()  # result unchanged, just slower
+        assert second.stats.recalled == 2 and second.stats.computed == 1
+        c = obs.counters()
+        assert c["store.corrupt"] == 1
+        assert c["store.recall.warm"] == 2 and c["store.recall.cold"] == 1
+        assert "skipping corrupt store record" in capsys.readouterr().err
+
+        # the recompute overwrote the damaged record: pure recall now
+        obs.reset_counters()
+        third = SuiteRunner(_tiny_registry(), cores=CORES, store=store)
+        assert third.roster().to_csv() == r1.to_csv()
+        assert obs.counters()["store.recall.warm"] == 3
+        assert "store.recall.cold" not in obs.counters()
+
+    def test_wrong_shape_record_is_cold_recall(self, tmp_path):
+        """A record that parses but has a short row is a cold recall."""
+        from repro import obs
+
+        store = ResultStore(tmp_path)
+        SuiteRunner(_tiny_registry(), cores=CORES, store=store).roster()
+        key = next(iter(store.keys()))
+        rec = store.get(key)
+        rec["row"] = rec["row"][:-1]
+        store.put(key, rec)
+
+        obs.reset_counters()
+        second = SuiteRunner(_tiny_registry(), cores=CORES, store=store)
+        second.roster()
+        assert second.stats.computed == 1 and second.stats.recalled == 2
+        assert obs.counters()["store.recall.cold"] == 1
+
 
 class TestProcessFanOut:
     """Entry-level process-pool characterization (whole entries, not just
