@@ -32,6 +32,9 @@ Sections map 1:1 to paper artifacts:
            the 16 end-to-end decode/train zoo steps cold against its own
            throwaway store, timing jaxpr walk + eqn lowering + windowed
            trace walks end to end (skipped when jax is unavailable)
+- megaref — the chunk-streaming simulator over one long bounded-footprint
+           trace (2M refs fast / 10M full), always cold: times
+           ``cachesim_stream.simulate_chunked`` end to end
 - case1..case4 — §5 case studies
 - roofline — §Roofline TPU table (from results/dryrun artifacts)
 - kernels  — Pallas kernel microbench + v5e roofline bounds
@@ -200,6 +203,34 @@ def main() -> None:
         res.name = "models"
         return res
 
+    # megaref: the chunk-streaming path over a single long trace with a
+    # bounded footprint (the whole-model shape: refs grow, the working
+    # set does not).  Deterministic synthetic stream so the section is
+    # comparable across runs; always cold — nothing here touches a store.
+    def megaref_rows():
+        import numpy as np
+
+        from repro.core import cachesim
+        from repro.core.cachesim_stream import DEFAULT_CHUNK, simulate_chunked
+
+        n = 2_000_000 if args.fast else 10_000_000
+        rng = np.random.default_rng(0)
+        sweep = (np.arange(n, dtype=np.int64) * 3) % (1 << 19)
+        hot = rng.integers(0, 4_096, n, dtype=np.int64)
+        addr = np.where(rng.random(n) < 0.3, hot, sweep) * 8
+        header = ("name", "refs", "chunk", "l1_misses", "llc_misses",
+                  "lfmr", "mpki")
+        rows = []
+        for cfg in (cachesim.host_config(4), cachesim.ndp_config(4)):
+            sim = simulate_chunked(addr, cfg, chunk=DEFAULT_CHUNK,
+                                   name=f"megaref.{cfg.name}",
+                                   scan="jax" if args.backend == "jax"
+                                   else None)
+            rows.append((sim.name, n, DEFAULT_CHUNK, sim.l1_misses,
+                         sim.level_misses[-1], round(sim.lfmr, 4),
+                         round(sim.mpki, 2)))
+        return rows, header
+
     sections = {
         "fig1": lambda: paper_figures.fig1_roofline_mpki(study),
         "fig3": lambda: paper_figures.fig3_locality_clustering(study),
@@ -216,6 +247,7 @@ def main() -> None:
         "serving": lambda: serving_roster("serving"),
         "serving_warm": lambda: serving_roster("serving_warm"),
         "models": models_roster,
+        "megaref": megaref_rows,
         "case1": lambda: paper_figures.case1_noc(study),
         "case2": lambda: paper_figures.case2_accelerators(study),
         "case3": lambda: paper_figures.case3_core_models(study),

@@ -37,6 +37,7 @@ contract ``refs == loads + stores == addresses.size`` on full walks, and a
 
 from __future__ import annotations
 
+import weakref
 from dataclasses import dataclass
 from typing import Callable
 
@@ -167,6 +168,41 @@ def _tile_words(op: OperandSpec, block_idx: tuple[int, ...],
     return base_word + words
 
 
+def _tile_words_batch(op: OperandSpec, idxs: np.ndarray,
+                      base_word: int) -> np.ndarray:
+    """Word addresses for many blocks of one operand at once.
+
+    ``idxs`` is ``(k, rank)``; row ``i`` of the result equals
+    ``_tile_words(op, tuple(idxs[i]), base_word)`` (shape ``(k,
+    block_words)``).
+    """
+    shape, blk = op.shape, op.block_shape
+    strides = [1] * len(shape)
+    for i in range(len(shape) - 2, -1, -1):
+        strides[i] = strides[i + 1] * shape[i + 1]
+    k = idxs.shape[0]
+    starts = np.zeros((k, 1), dtype=np.int64)
+    for a in range(len(blk) - 1):
+        ax = np.arange(blk[a], dtype=np.int64) * strides[a]
+        offs = idxs[:, a, None] * (blk[a] * strides[a]) + ax[None, :]
+        starts = (starts[:, :, None] + offs[:, None, :]).reshape(k, -1)
+    last_b = blk[-1]
+    if last_b % op.elems_per_word:
+        # With last_b word-aligned every block offset idx*last_b is too,
+        # so this single check covers _tile_words' per-block guard.
+        raise ValueError(
+            f"{op.name}: block rows must be word-aligned "
+            f"(last dim {last_b}, {op.elems_per_word} elems/word)")
+    row = np.arange(last_b, dtype=np.int64)
+    elems = (starts[:, :, None]
+             + (idxs[:, -1] * last_b)[:, None, None]
+             + row[None, None, :]).reshape(k, -1)
+    words = elems // op.elems_per_word
+    if op.elems_per_word > 1:
+        words = words[:, :: op.elems_per_word]
+    return base_word + words
+
+
 def from_jaxpr(fn, args, *, scalar_values=(), flops: float = 0.0,
                name: str | None = None) -> GridCapture:
     """Capture a kernel's launch geometry by tracing its ``pallas_call``.
@@ -210,8 +246,58 @@ def walk(cap: GridCapture, *, count_only: bool = False,
     return res
 
 
+def _block_words(op: OperandSpec) -> int:
+    n = 1
+    for d in op.block_shape:
+        n *= d
+    return -(-n // op.elems_per_word)
+
+
+_OP_TABLES: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _op_table(op: OperandSpec, steps: list[tuple[int, ...]]) -> np.ndarray:
+    """Per-step block-index table, ``(n_steps, block_rank)`` int64.
+
+    jaxpr-captured index maps carry their precomputed table (set by
+    ``_table_index_map``); mirrored Python index maps are evaluated once
+    per step and memoized per map object (keyed weakly, revalidated
+    against the step list) — a capture walked once per core count pays
+    the per-step Python only on its first walk.
+    """
+    tbl = getattr(op.index_map, "table", None)
+    if tbl is not None and len(tbl) == len(steps):
+        return np.asarray(tbl, dtype=np.int64).reshape(len(steps), -1)
+    cached = _OP_TABLES.get(op.index_map)
+    if cached is not None and cached[0] == steps:
+        return cached[1]
+    rows = np.empty((len(steps), len(op.block_shape)), dtype=np.int64)
+    for si, step in enumerate(steps):
+        rows[si] = [int(x) for x in op.index_map(*step)]
+    try:
+        _OP_TABLES[op.index_map] = (list(steps), rows)
+    except TypeError:
+        pass                      # unhashable / non-weakref map: skip memo
+    return rows
+
+
 def _walk(cap: GridCapture, *, count_only: bool,
           bases: dict[str, int] | None) -> CaptureResult:
+    """Vectorized pipeline replay.
+
+    Emission decisions are mask arithmetic over per-operand index tables;
+    only the steps that actually move a block run any per-step Python.
+    Counter- and byte-identical to the scalar reference walker
+    (:func:`_walk_loop`, kept for the differential gate in
+    ``tests/test_capture.py``):
+
+    - an *input* fetches when its block index differs from the previous
+      value recorded under its operand name — names are shared state, so
+      the comparison runs over the step-major, operand-order merged
+      sequence of every same-named operand;
+    - an *output* writes back when its own next-step index differs (or at
+      the final step).
+    """
     if bases is None:
         base: dict[str, int] = {}
         cursor = 0
@@ -223,11 +309,120 @@ def _walk(cap: GridCapture, *, count_only: bool,
     else:
         base = {op.name: bases[op.name] for op in cap.operands}
 
-    def block_words(op: OperandSpec) -> int:
-        n = 1
-        for d in op.block_shape:
-            n *= d
-        return -(-n // op.elems_per_word)
+    steps = list(np.ndindex(*cap.grid))
+    n_steps = len(steps)
+    if n_steps == 0:
+        footprint = sum({op.name: op.words for op in cap.operands}.values())
+        return CaptureResult(
+            name=cap.name, addresses=np.empty(0, dtype=np.int64),
+            loads=0, stores=0, footprint_words=footprint, grid_steps=0,
+            flops=cap.flops)
+    if count_only and n_steps == 1:
+        # Single-step launch (gridless ops dominate whole-model traces):
+        # every input fetches once, every output writes back once.
+        loads = stores = 0
+        for op in cap.operands:
+            if op.role == "in":
+                loads += _block_words(op)
+            else:
+                stores += _block_words(op)
+        footprint = sum({op.name: op.words for op in cap.operands}.values())
+        return CaptureResult(
+            name=cap.name, addresses=np.empty(0, dtype=np.int64),
+            loads=loads, stores=stores, footprint_words=footprint,
+            grid_steps=1, flops=cap.flops)
+    if n_steps * len(cap.operands) <= 64:
+        # Tiny launches (whole-model traces are thousands of small ops):
+        # mask setup costs more than just walking the steps.
+        return _walk_loop(cap, count_only=count_only, bases=bases)
+    tables = [_op_table(op, steps) for op in cap.operands]
+
+    # Merged change masks per operand name (inputs consult the last index
+    # written by ANY same-named operand, outputs included).
+    by_name: dict[str, list[int]] = {}
+    for oi, op in enumerate(cap.operands):
+        by_name.setdefault(op.name, []).append(oi)
+    emit = np.zeros((len(cap.operands), n_steps), dtype=bool)
+    for name, ois in by_name.items():
+        k = len(ois)
+        merged = np.stack([tables[oi] for oi in ois], axis=1)  # (n, k, r)
+        flat = merged.reshape(n_steps * k, -1)
+        changed = np.empty(n_steps * k, dtype=bool)
+        changed[0] = True
+        np.any(flat[1:] != flat[:-1], axis=1, out=changed[1:])
+        changed = changed.reshape(n_steps, k)
+        for j, oi in enumerate(ois):
+            if cap.operands[oi].role == "in":
+                emit[oi] = changed[:, j]
+    for oi, op in enumerate(cap.operands):
+        if op.role != "in":
+            t = tables[oi]
+            emit[oi, -1] = True
+            np.any(t[1:] != t[:-1], axis=1, out=emit[oi, :-1])
+
+    loads = stores = 0
+    if count_only:
+        for oi, op in enumerate(cap.operands):
+            words = int(emit[oi].sum()) * _block_words(op)
+            if op.role == "in":
+                loads += words
+            else:
+                stores += words
+        addr = np.empty(0, dtype=np.int64)
+    else:
+        # nonzero on the transposed mask yields events in (step, operand)
+        # lexicographic order — the scalar walker's emission order.  All
+        # of one operand's blocks tile in a single batched call, then land
+        # at their events' offsets in the output stream.
+        si_arr, oi_arr = np.nonzero(emit.T)
+        bw = np.array([_block_words(op) for op in cap.operands],
+                      dtype=np.int64)
+        sizes = bw[oi_arr]
+        ends = np.cumsum(sizes)
+        addr = np.empty(int(ends[-1]) if ends.size else 0, dtype=np.int64)
+        for oi, op in enumerate(cap.operands):
+            sel = np.flatnonzero(oi_arr == oi)
+            if not sel.size:
+                continue
+            tiles = _tile_words_batch(op, tables[oi][si_arr[sel]],
+                                      base[op.name])
+            pos = ((ends[sel] - sizes[sel])[:, None]
+                   + np.arange(tiles.shape[1], dtype=np.int64)[None, :])
+            addr[pos] = tiles
+            if op.role == "in":
+                loads += tiles.size
+            else:
+                stores += tiles.size
+
+    footprint = sum({op.name: op.words for op in cap.operands}.values())
+    return CaptureResult(
+        name=cap.name,
+        addresses=addr.astype(np.int64, copy=False),
+        loads=loads,
+        stores=stores,
+        footprint_words=footprint,
+        grid_steps=n_steps,
+        flops=cap.flops,
+    )
+
+
+def _walk_loop(cap: GridCapture, *, count_only: bool,
+               bases: dict[str, int] | None) -> CaptureResult:
+    """Scalar reference walker — the schedule spelled out one step at a
+    time.  Serves tiny launches (where mask setup would dominate) and the
+    differential gate that diffs it against the vectorized :func:`_walk`
+    over the captured-kernel roster.
+    """
+    if bases is None:
+        base: dict[str, int] = {}
+        cursor = 0
+        for op in cap.operands:
+            if op.name not in base:
+                base[op.name] = cursor
+                cursor += (-(-op.words // _LINE_WORDS) * _LINE_WORDS
+                           + _LINE_WORDS)
+    else:
+        base = {op.name: bases[op.name] for op in cap.operands}
 
     steps = list(np.ndindex(*cap.grid))
     chunks: list[np.ndarray] = []
@@ -242,7 +437,7 @@ def _walk(cap: GridCapture, *, count_only: bool,
             if op.role == "in":
                 if bidx != prev_idx[op.name]:
                     if count_only:
-                        loads += block_words(op)
+                        loads += _block_words(op)
                     else:
                         w = _tile_words(op, bidx, base[op.name])
                         chunks.append(w)
@@ -254,7 +449,7 @@ def _walk(cap: GridCapture, *, count_only: bool,
                 )
                 if nidx != bidx:  # residency ends here -> write back
                     if count_only:
-                        stores += block_words(op)
+                        stores += _block_words(op)
                     else:
                         w = _tile_words(op, bidx, base[op.name])
                         chunks.append(w)

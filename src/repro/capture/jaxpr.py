@@ -166,6 +166,153 @@ def elems_per_word(dtype, *dims: int) -> int:
     return max(1, epw)
 
 
+class _NpUnsupported(Exception):
+    """Index-map jaxpr uses a primitive the NumPy evaluator doesn't cover."""
+
+
+def _np_trunc_div(a, b):
+    # lax.div on integers rounds toward zero (C semantics); numpy //
+    # floors, so route through the magnitude quotient.
+    return np.sign(a) * np.sign(b) * (np.abs(a) // np.abs(b))
+
+
+# Vectorized implementations of the elementwise primitives index maps use
+# (affine arithmetic + comparisons).  Anything absent raises
+# _NpUnsupported and the caller falls back to the jax evaluation.
+_NP_ELEMENTWISE = {
+    "add": np.add, "sub": np.subtract, "mul": np.multiply,
+    "max": np.maximum, "min": np.minimum, "neg": np.negative,
+    "sign": np.sign, "abs": np.abs,
+    "and": np.bitwise_and, "or": np.bitwise_or, "xor": np.bitwise_xor,
+    "not": np.invert,
+    "div": _np_trunc_div,
+    "rem": np.fmod,  # lax.rem is the C-style truncated remainder
+    "lt": np.less, "le": np.less_equal, "gt": np.greater,
+    "ge": np.greater_equal, "eq": np.equal, "ne": np.not_equal,
+}
+
+
+def _np_dynamic_slice(ins, sizes, n_steps):
+    """Batched ``lax.dynamic_slice``: per-step scalar starts (clamped, as
+    lax does) into an unbatched operand array."""
+    (op, op_batched), *starts = ins
+    if op_batched:
+        raise _NpUnsupported("batched dynamic_slice operand")
+    sizes = tuple(int(s) for s in sizes)
+    nd = op.ndim
+    batched = any(b for _, b in starts)
+    idx = []
+    for d, ((s, sb), size) in enumerate(zip(starts, sizes)):
+        if s.ndim != (1 if sb else 0):
+            raise _NpUnsupported("non-scalar dynamic_slice start")
+        s = np.clip(s.astype(np.int64), 0, op.shape[d] - size)
+        offs = np.arange(size, dtype=np.int64).reshape(
+            (1,) * (d + 1) + (size,) + (1,) * (nd - d - 1))
+        sarr = s.reshape(((n_steps,) if sb else (1,)) + (1,) * nd)
+        idx.append(sarr + offs)
+    out = op[tuple(np.broadcast_arrays(*idx))]
+    if not batched:
+        out = out[0]
+    return (out, batched)
+
+
+def _np_index_table(jaxpr, consts, grid: tuple[int, ...], scalars,
+                    n_block_dims: int) -> np.ndarray:
+    """Pure-NumPy evaluation of a discharged index-map jaxpr, all grid
+    steps at once.
+
+    A tiny vmap: every value is ``(array, batched)`` where batched arrays
+    carry a leading ``n_steps`` axis.  Covers the affine + scalar-table
+    index maps every repo kernel uses (add/mul/compare/select_n/
+    dynamic_slice/squeeze + nested pjit); raises :class:`_NpUnsupported`
+    on anything else, and the caller falls back to the jax path.  Worth
+    the interpreter: the jax evaluation XLA-compiles one vmapped
+    program per (operand, grid) shape, which dominates cold suite builds.
+    """
+    from jax import core
+
+    n_steps = 1
+    for g in grid:
+        n_steps *= int(g)
+    axes = np.indices(grid).reshape(len(grid), -1).astype(np.int64)
+    env: dict = {}
+
+    def read(v):
+        if isinstance(v, core.Literal):
+            return (np.asarray(v.val), False)
+        return env[v]
+
+    def aligned(vals):
+        """Add/align the batch axis so plain numpy broadcasting matches
+        per-example (vmap) broadcasting."""
+        rank = max(a.ndim - (1 if b else 0) for a, b in vals)
+        out = []
+        for a, b in vals:
+            ex = a.ndim - (1 if b else 0)
+            if b:
+                a = a.reshape(a.shape[:1] + (1,) * (rank - ex)
+                              + a.shape[1:])
+            else:
+                a = a.reshape((1,) + (1,) * (rank - ex) + a.shape)
+            out.append(a)
+        return out
+
+    def run(jaxpr, consts, args):
+        for var, c in zip(jaxpr.constvars, consts):
+            env[var] = (np.asarray(c), False)
+        for var, a in zip(jaxpr.invars, args):
+            env[var] = a
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            ins = [read(v) for v in eqn.invars]
+            batched = any(b for _, b in ins)
+            if name == "pjit":
+                closed = eqn.params["jaxpr"]
+                outs = run(closed.jaxpr, closed.consts, ins)
+            elif name in _NP_ELEMENTWISE:
+                arrs = aligned(ins)
+                outs = [(_NP_ELEMENTWISE[name](*arrs), batched)]
+            elif name == "select_n":
+                if len(ins) != 3:
+                    raise _NpUnsupported("select_n with >2 cases")
+                pred, lo, hi = aligned(ins)
+                outs = [(np.where(pred, hi, lo), batched)]
+            elif name == "convert_element_type":
+                (a, b), = ins
+                outs = [(a.astype(np.dtype(eqn.params["new_dtype"])), b)]
+            elif name == "squeeze":
+                (a, b), = ins
+                dims = tuple(int(d) + (1 if b else 0)
+                             for d in eqn.params["dimensions"])
+                outs = [(np.squeeze(a, axis=dims), b)]
+            elif name == "dynamic_slice":
+                outs = [_np_dynamic_slice(ins, eqn.params["slice_sizes"],
+                                          n_steps)]
+            else:
+                raise _NpUnsupported(name)
+            for var, out in zip(eqn.outvars, outs):
+                env[var] = out
+        return [read(v) for v in jaxpr.outvars]
+
+    args = ([(axes[i], True) for i in range(len(grid))]
+            + [(np.asarray(s), False) for s in scalars])
+    outs = run(jaxpr, consts, args)[:n_block_dims]
+    cols = []
+    for a, b in outs:
+        if not b:
+            a = np.broadcast_to(a.reshape((1,) + a.shape),
+                                (n_steps,) + a.shape)
+        if a.ndim != 1:
+            a = a.reshape(n_steps, -1)
+            if a.shape[1] != 1:
+                raise _NpUnsupported("non-scalar block index output")
+            a = a[:, 0]
+        cols.append(a.astype(np.int64))
+    if not cols:
+        return np.zeros((n_steps, 0), dtype=np.int64)
+    return np.stack(cols, axis=1)
+
+
 def _tabulate_index_map(index_map_jaxpr, grid: tuple[int, ...],
                         scalar_values: tuple) -> np.ndarray:
     """Evaluate one block's index map for every grid step.
@@ -174,7 +321,10 @@ def _tabulate_index_map(index_map_jaxpr, grid: tuple[int, ...],
     grid-step order (last grid axis fastest — the Pallas iteration order
     the walker replays).  Ref reads of scalar-prefetch operands are
     discharged to pure ops first; the discharged jaxpr appends the ref
-    values as extra outputs, which are dropped.
+    values as extra outputs, which are dropped.  The common all-affine /
+    scalar-table maps are evaluated by the vectorized NumPy interpreter
+    (:func:`_np_index_table`); exotic maps fall back to a vmapped jax
+    evaluation.
     """
     import jax
     import jax.numpy as jnp
@@ -202,6 +352,12 @@ def _tabulate_index_map(index_map_jaxpr, grid: tuple[int, ...],
         row = point()
         return np.asarray([[int(x) for x in row]], dtype=np.int64) \
             if n_block_dims else np.zeros((1, 0), dtype=np.int64)
+    try:
+        return _np_index_table(
+            dj, dconsts, grid, [np.asarray(v) for v in scalar_values],
+            n_block_dims)
+    except _NpUnsupported:
+        pass
     steps = np.stack(
         [a.ravel() for a in np.indices(grid)], axis=0
     ).astype(np.int32)
@@ -232,6 +388,9 @@ def _table_index_map(table: np.ndarray,
             lin += int(s) * st
         return tuple(int(x) for x in table[lin])
 
+    # The walker reads the whole table at once when present, skipping the
+    # per-step closure calls (grid.py `_op_table`).
+    index_map.table = table
     return index_map
 
 

@@ -82,6 +82,10 @@ class CapturedKernel:
     # of the suite-store fingerprint: a geometry edit must invalidate
     # stored rows even when it leaves name/AI/target_refs unchanged.
     geometry: tuple[tuple[str, object], ...] = ()
+    # True when the per-thread trace AND l3_factor are independent of the
+    # core count (builder ignores ``cores`` and l3_shared holds the LLC
+    # factor at 1.0), so one trace serves every sweep point.
+    core_invariant: bool = False
 
     def params(self) -> dict:
         return {
@@ -157,6 +161,7 @@ def _gather_entries() -> list[CapturedKernel]:
             instr_overhead=3.0,
             builder=_gather_builder(**_GEO_GATHER_BIG),
             geometry=tuple(sorted(_GEO_GATHER_BIG.items())),
+            core_invariant=True,
         ),
         CapturedKernel(
             name="pal.gather.16kx256",
@@ -170,6 +175,7 @@ def _gather_entries() -> list[CapturedKernel]:
             instr_overhead=3.0,
             builder=_gather_builder(**_GEO_GATHER_WIDE),
             geometry=tuple(sorted(_GEO_GATHER_WIDE.items())),
+            core_invariant=True,
         ),
     ]
 
@@ -273,6 +279,7 @@ def _paged_entries() -> list[CapturedKernel]:
             instr_overhead=2.0,
             builder=_paged_builder(**geo),
             geometry=tuple(sorted(geo.items())),
+            core_invariant=True,
         ))
     return out
 
@@ -305,6 +312,7 @@ def _moe_entries() -> list[CapturedKernel]:
             instr_overhead=3.0,
             builder=_moe_builder(**geo),
             geometry=tuple(sorted(geo.items())),
+            core_invariant=True,
         ))
     return out
 
@@ -392,5 +400,6 @@ def captured_workloads(
             ai_ops_per_access=ai,
             instr_per_access=round(ai + spec.instr_overhead, 3),
             gen=_make_gen(spec),
+            core_invariant=spec.core_invariant,
         ))
     return out

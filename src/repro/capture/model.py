@@ -104,6 +104,15 @@ class ModelOp:
     bases: dict[str, int]
 
     def walk(self, *, count_only: bool = False) -> CaptureResult:
+        if count_only:
+            # Count-only walks are pure and repeated (walk_window sizes
+            # every op, then whole-step accounting counts them again), so
+            # cache on the instance (frozen dataclass → object.__setattr__).
+            got = getattr(self, "_counts", None)
+            if got is None:
+                got = walk(self.capture, count_only=True, bases=self.bases)
+                object.__setattr__(self, "_counts", got)
+            return got
         return walk(self.capture, count_only=count_only, bases=self.bases)
 
 

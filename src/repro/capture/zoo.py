@@ -278,5 +278,6 @@ def model_workloads(
             ai_ops_per_access=ai,
             instr_per_access=round(ai + spec.instr_overhead, 3),
             gen=_make_gen(spec),
+            core_invariant=True,
         ))
     return out

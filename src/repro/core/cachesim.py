@@ -32,7 +32,7 @@ import numpy as np
 LINE_BYTES = 64
 WORDS_PER_LINE = LINE_BYTES // 8
 
-BACKENDS = ("reference", "vectorized")
+BACKENDS = ("reference", "vectorized", "jax")
 
 __all__ = [
     "CacheLevelConfig",
@@ -40,6 +40,7 @@ __all__ = [
     "SimResult",
     "simulate",
     "simulate_batch",
+    "simulate_many",
     "host_config",
     "ndp_config",
     "BACKENDS",
@@ -50,10 +51,13 @@ __all__ = [
 def default_backend() -> str:
     """Backend used when ``simulate(..., backend=None)``.
 
-    ``REPRO_SIM_BACKEND`` (``reference`` | ``vectorized``) overrides; the
-    built-in default is the vectorized backend, which is counter-identical
-    to the reference loop (see ``tests/test_cachesim_vec.py``) and 10-40x
-    faster.
+    ``REPRO_SIM_BACKEND`` (``reference`` | ``vectorized`` | ``jax``)
+    overrides; the built-in default is the vectorized backend, which is
+    counter-identical to the reference loop (see
+    ``tests/test_cachesim_vec.py``) and 10-40x faster.  ``jax`` is the
+    vectorized backend with the contested-revisit window scan jitted as
+    ``jax.numpy`` ops (counter-identical; falls back to the NumPy scan
+    with a one-time warning when jax is absent).
     """
     backend = os.environ.get("REPRO_SIM_BACKEND", "vectorized")
     if backend not in BACKENDS:
@@ -194,6 +198,33 @@ def broadcast_names(names, n: int) -> list:
     return names
 
 
+def simulate_many(requests, *, backend: str | None = None):
+    """Run many ``(addresses, configs, opts)`` requests in one call.
+
+    Each request is one trace with its hierarchy configs and the keyword
+    arguments of :func:`simulate_batch` as an ``opts`` dict.  On the
+    vectorized/jax backends this is the cross-trace segmented forest walk
+    (:func:`repro.core.cachesim_vec.simulate_many`): same-geometry nodes
+    from *different* traces share one stream-profile pass.  On the
+    reference backend each request runs through the per-config loop —
+    counter-identical either way.  Returns one ``list[SimResult]`` per
+    request.
+    """
+    if backend is None:
+        backend = default_backend()
+    if backend in ("vectorized", "jax"):
+        from . import cachesim_vec  # deferred: cachesim_vec imports us
+
+        return cachesim_vec.simulate_many(
+            list(requests), scan="jax" if backend == "jax" else None)
+    if backend != "reference":
+        raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
+    return [
+        simulate_batch(addresses, configs, backend="reference", **opts)
+        for addresses, configs, opts in requests
+    ]
+
+
 def simulate_batch(
     addresses: np.ndarray,
     configs,
@@ -217,7 +248,7 @@ def simulate_batch(
     """
     if backend is None:
         backend = default_backend()
-    if backend == "vectorized":
+    if backend in ("vectorized", "jax"):
         from . import cachesim_vec  # deferred: cachesim_vec imports us
 
         return cachesim_vec.simulate_batch(
@@ -227,6 +258,7 @@ def simulate_batch(
             instr_per_access=instr_per_access,
             l3_factor=l3_factor,
             names=names,
+            scan="jax" if backend == "jax" else None,
         )
     if backend != "reference":
         raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
@@ -321,13 +353,14 @@ def simulate(
     denominator.
     ``l3_factor``: effective fraction of the shared LLC available to this
     thread (contention model; ignored for NDP).
-    ``backend``: ``"reference"`` (this module's per-line loop) or
-    ``"vectorized"`` (:mod:`repro.core.cachesim_vec`, counter-identical);
+    ``backend``: ``"reference"`` (this module's per-line loop),
+    ``"vectorized"`` (:mod:`repro.core.cachesim_vec`, counter-identical)
+    or ``"jax"`` (vectorized with the window scan jitted on jax);
     ``None`` resolves via :func:`default_backend` / ``REPRO_SIM_BACKEND``.
     """
     if backend is None:
         backend = default_backend()
-    if backend == "vectorized":
+    if backend in ("vectorized", "jax"):
         from . import cachesim_vec  # deferred: cachesim_vec imports us
 
         return cachesim_vec.simulate(
@@ -337,6 +370,7 @@ def simulate(
             instr_per_access=instr_per_access,
             l3_factor=l3_factor,
             name=name,
+            scan="jax" if backend == "jax" else None,
         )
     if backend != "reference":
         raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")

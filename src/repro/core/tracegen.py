@@ -97,6 +97,12 @@ class Workload:
     ai_ops_per_access: float   # AI numerator (workload ALU/FP ops per ref)
     instr_per_access: float    # total dynamic instructions per ref (MPKI denom)
     gen: Callable[[int, np.random.Generator], TraceSpec]
+    # True when gen ignores `cores` entirely (trace AND metadata, incl.
+    # l3_factor): the engine then generates one trace per (workload, seed)
+    # and shares it across the whole core sweep — and, because every sweep
+    # point hands the simulator the *same* array, the per-trace memo and
+    # the segmented batcher collapse their work too.
+    core_invariant: bool = False
 
     def trace(self, cores: int, seed: int = 0) -> TraceSpec:
         return self.gen(
@@ -230,8 +236,15 @@ def make_suite(refs: int = _N, *, variants: int = 1, seed: int = 0) -> list[Work
     rng = np.random.default_rng(seed)
     out: list[Workload] = []
 
+    # Families whose generators ignore `cores` (addresses and l3_factor
+    # alike): stream/irregular share the whole footprint, chase's hot
+    # locals and l1cap/gemm's working sets are per-thread constants.
+    # blocked partitions its tile per core and contended scales l3_factor.
+    invariant = {"stream", "irregular", "chase", "l1cap", "gemm"}
+
     def add(name, family, ai, ipa, gen):
-        out.append(Workload(name, family, FAMILIES[family], ai, ipa, gen))
+        out.append(Workload(name, family, FAMILIES[family], ai, ipa, gen,
+                            core_invariant=family in invariant))
 
     for v in range(variants):
         tag = "" if v == 0 else f".v{v}"

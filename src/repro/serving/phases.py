@@ -97,6 +97,7 @@ def _window_workload(scen: ServingScenario, index: int,
         ai_ops_per_access=ai,
         instr_per_access=round(ai + scen.instr_overhead, 3),
         gen=gen,
+        core_invariant=True,    # gen ignores cores; l3_factor pinned at 1.0
     )
 
 

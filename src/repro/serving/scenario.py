@@ -188,6 +188,7 @@ class ServingScenario:
             ai_ops_per_access=ai,
             instr_per_access=round(ai + self.instr_overhead, 3),
             gen=_make_gen(self),
+            core_invariant=True,
         )
 
 
@@ -352,6 +353,9 @@ def _flash_windows(scen: ServingScenario, wseed: int) -> list[WindowTrace]:
     batch = _SlotBatch(scen.max_batch)
     rid = 0
     out = []
+    # Slots sharing a KV length walk identical geometry (only the context
+    # base differs, applied below) — one walk per distinct length.
+    walked: dict[int, object] = {}
     for dem in demands:
         sk = max(128, -(-int(round(dem.intensity * base_sk)) // 128) * 128)
         for key in _demand_stream(dem, 1):
@@ -362,8 +366,11 @@ def _flash_windows(scen: ServingScenario, wseed: int) -> list[WindowTrace]:
         chunks, flops = [], 0.0
         for slot in sorted(batch.active):
             ctx, seq_sk = batch.active[slot].payload
-            res = walk(flash_capture.capture(sq=sq, sk=seq_sk, d=d,
-                                             path="mirror"))
+            res = walked.get(seq_sk)
+            if res is None:
+                res = walked[seq_sk] = walk(
+                    flash_capture.capture(sq=sq, sk=seq_sk, d=d,
+                                          path="mirror"))
             chunks.append(res.addresses + ctx * stride)
             flops += res.flops
         out.append(_finish(scen, dem, chunks, flops, len(batch.active)))

@@ -55,6 +55,7 @@ Memo invariants this engine guarantees (and its tests enforce):
 
 from __future__ import annotations
 
+import hashlib
 import os
 from concurrent.futures import Executor, ThreadPoolExecutor
 from dataclasses import dataclass, field
@@ -122,7 +123,64 @@ def _gen_signature(w: Workload) -> tuple:
 
 def _fingerprint(w: Workload) -> tuple:
     return (w.family, w.expected_class, w.ai_ops_per_access,
-            w.instr_per_access, _gen_signature(w))
+            w.instr_per_access, getattr(w, "core_invariant", False),
+            _gen_signature(w))
+
+
+# Schema version of the engine's cell-record store (``profile_store``).
+# Bump when SimResult gains fields or the digest recipe changes: old
+# records become unreachable (their keys embed the old schema) and are
+# simply recomputed.
+_CELL_SCHEMA = 1
+
+
+def _cell_digest(fp: tuple, key: CellKey) -> str:
+    """Content address of one simulation cell's *result*.
+
+    Everything that determines the :class:`SimResult` goes in: the cell
+    schema, the workload fingerprint (family/AI/generator code + closure,
+    so a generator edit invalidates records), and the cell key itself —
+    the hierarchy is frozen and reprs deterministically.  No trace needs
+    to be generated to compute the digest, which is the whole point:
+    a pool worker can recall a sibling's finished cell without paying
+    for the trace."""
+    h = key.hierarchy
+    text = repr((_CELL_SCHEMA, fp, key.workload, key.seed, key.cores,
+                 h.levels, h.prefetcher, h.prefetch_degree,
+                 h.prefetch_streams, h.name, h.shared_llc))
+    return hashlib.sha256(text.encode()).hexdigest()
+
+
+def _sim_to_record(sim: SimResult) -> dict:
+    return {
+        "schema": _CELL_SCHEMA,
+        "accesses": sim.accesses,
+        "instructions": sim.instructions,
+        "ai": sim.ai,
+        "level_hits": list(sim.level_hits),
+        "level_misses": list(sim.level_misses),
+        "lines": sim.lines_touched,
+        "pf": [sim.prefetch_issued, sim.prefetch_useful],
+    }
+
+
+def _record_to_sim(rec: dict, name: str) -> SimResult | None:
+    if not isinstance(rec, dict) or rec.get("schema") != _CELL_SCHEMA:
+        return None
+    try:
+        return SimResult(
+            name=name,
+            accesses=int(rec["accesses"]),
+            instructions=int(rec["instructions"]),
+            ai=float(rec["ai"]),
+            level_misses=tuple(int(m) for m in rec["level_misses"]),
+            level_hits=tuple(int(h) for h in rec["level_hits"]),
+            lines_touched=int(rec["lines"]),
+            prefetch_issued=int(rec["pf"][0]),
+            prefetch_useful=int(rec["pf"][1]),
+        )
+    except (KeyError, TypeError, ValueError, IndexError):
+        return None
 
 
 class SimEngine:
@@ -135,12 +193,19 @@ class SimEngine:
     order (``REPRO_SIM_BACKEND`` wins, then vectorized).
     """
 
-    def __init__(self, *, backend: str | None = None) -> None:
+    def __init__(self, *, backend: str | None = None,
+                 profile_store=None) -> None:
         if backend is not None and backend not in cachesim.BACKENDS:
             raise ValueError(
                 f"unknown backend {backend!r}; expected one of {cachesim.BACKENDS}"
             )
         self.backend = backend
+        # Optional cross-process cell cache (a ResultStore-shaped object
+        # with get/put).  When set, finished cells are published as
+        # content-addressed records and recalled by digest before any
+        # trace is generated — this is how ``--processes`` pool workers
+        # share work despite having no shared memory.
+        self.profile_store = profile_store
         self._traces: dict[tuple[str, int, int], TraceSpec] = {}
         self._sims: dict[CellKey, SimResult] = {}
         self._fingerprints: dict[str, tuple] = {}
@@ -165,10 +230,21 @@ class SimEngine:
             )
 
     # ---- memoized layers ------------------------------------------------
+    @staticmethod
+    def _trace_cores(workload: Workload, cores: int) -> int:
+        """Effective core count for trace identity.
+
+        Core-invariant workloads (builder ignores ``cores`` and the LLC
+        factor is constant) declare it on the Workload, and every sweep
+        point shares the 1-core trace — the single biggest win on the
+        captured/serving/model rosters, whose traces dominate wall-clock.
+        """
+        return 1 if getattr(workload, "core_invariant", False) else cores
+
     def trace(self, workload: Workload, cores: int, *, seed: int = 0) -> TraceSpec:
         """Per-thread trace for one (workload, cores, seed), memoized."""
         self.register(workload)
-        key = (workload.name, cores, seed)
+        key = (workload.name, self._trace_cores(workload, cores), seed)
         spec = self._traces.get(key)
         if spec is None:
             obs.count("engine.trace.run")
@@ -246,6 +322,99 @@ class SimEngine:
             backend=self.backend,
         )
 
+    def simulate_cells(
+        self,
+        items: Iterable[tuple[Workload, int, HierarchyConfig]],
+        *,
+        seed: int = 0,
+    ) -> list[SimResult]:
+        """Run (or recall) cells spanning *many workloads* in one pass.
+
+        The cross-workload generalization of :meth:`simulate_batch`: all
+        missing cells, across every trace in ``items``, go to the
+        vectorized backend's :func:`~repro.core.cachesim_vec.simulate_many`
+        forest walk, which stacks same-geometry nodes from *different*
+        traces into segmented :class:`StreamProfile`\\ s — one collapse +
+        sort + capped window scan per unique hierarchy geometry across the
+        whole roster instead of one per trace.  Results, memoization and
+        stats are identical to per-cell :meth:`simulate` calls (the
+        reference backend falls back to its per-trace loop).
+
+        When ``profile_store`` is set, missing cells are first looked up
+        as content-addressed records (``store.profile.hit``/``miss``
+        counters) and freshly-run cells are published back, so process
+        pools sharing a store directory run each cell once fleet-wide.
+        """
+        items = list(items)
+        keys: list[CellKey] = []
+        for w, c, h in items:
+            self.register(w)
+            keys.append(CellKey(w.name, seed, c, h))
+
+        missing: dict[CellKey, tuple[Workload, int, HierarchyConfig]] = {}
+        hits = 0
+        for key, (w, c, h) in zip(keys, items):
+            if key in self._sims:
+                hits += 1
+            elif key in missing:
+                hits += 1  # duplicate cell within this call: one run
+            else:
+                missing[key] = (w, c, h)
+
+        if missing and self.profile_store is not None:
+            recalled = 0
+            for key in list(missing):
+                w, _, h = missing[key]
+                digest = _cell_digest(self._fingerprints[w.name], key)
+                rec = self.profile_store.get(digest)
+                sim = (_record_to_sim(rec, name=h.name)
+                       if rec is not None else None)
+                if sim is not None:
+                    self._sims[key] = sim
+                    del missing[key]
+                    recalled += 1
+            if recalled:
+                obs.count("store.profile.hit", recalled)
+                hits += recalled
+            if missing:
+                obs.count("store.profile.miss", len(missing))
+
+        if missing:
+            groups: dict[tuple, list] = {}
+            for key, (w, c, h) in missing.items():
+                gkey = (w.name, self._trace_cores(w, c), seed)
+                groups.setdefault(gkey, []).append((key, w, c, h))
+
+            with obs.span("engine.cells", traces=len(groups),
+                          cells=len(missing)):
+                requests = []
+                for batch in groups.values():
+                    _, w, c, _ = batch[0]
+                    spec = self.trace(w, c, seed=seed)
+                    requests.append((
+                        spec.addresses,
+                        [h for *_, h in batch],
+                        {"ai_ops_per_access": w.ai_ops_per_access,
+                         "instr_per_access": w.instr_per_access,
+                         "l3_factor": spec.l3_factor},
+                    ))
+                results = cachesim.simulate_many(requests,
+                                                 backend=self.backend)
+                for batch, sims in zip(groups.values(), results):
+                    for (key, *_), sim in zip(batch, sims):
+                        self._sims[key] = sim
+            if self.profile_store is not None:
+                for key, (w, _, _) in missing.items():
+                    self.profile_store.put(
+                        _cell_digest(self._fingerprints[w.name], key),
+                        _sim_to_record(self._sims[key]))
+            self.stats.sim_runs += len(missing)
+            obs.count("engine.sim.run", len(missing))
+        self.stats.sim_hits += hits
+        if hits:
+            obs.count("engine.sim.hit", hits)
+        return [self._sims[key] for key in keys]
+
     def simulate_batch(
         self,
         workload: Workload,
@@ -257,18 +426,20 @@ class SimEngine:
     ) -> list[SimResult]:
         """Run (or recall) many ``(cores, hierarchy)`` cells in one call.
 
-        The missing cells are grouped by trace — every distinct core count
-        is one trace — and each group runs through the backend's batched
-        single pass, so a trace's shared level prefixes (the same L1 in
-        every paper hierarchy, the same L1+L2 in every LLC variant) are
-        replayed once instead of once per hierarchy.  Groups are fanned
-        across an executor exactly like :meth:`sweep_parallel` (threads;
-        NumPy releases the GIL in the backend's hot loops).  Results,
-        memoization and stats accounting are identical to per-cell
-        :meth:`simulate` calls.
+        With no executor supplied (the common sequential case) this is
+        :meth:`simulate_cells` on a single workload: missing cells are
+        grouped by trace and run in one segmented backend pass.  When a
+        caller passes ``executor`` or ``max_workers``, the original
+        thread fan-out is used instead — per-trace groups are submitted
+        to the pool (NumPy releases the GIL in the backend's hot loops).
+        Results, memoization and stats accounting are identical to
+        per-cell :meth:`simulate` calls either way.
         """
         self.register(workload)
         cells = list(cells)
+        if executor is None and max_workers is None:
+            return self.simulate_cells(
+                [(workload, c, h) for c, h in cells], seed=seed)
         keys = [CellKey(workload.name, seed, c, h) for c, h in cells]
         specs = {c: self.trace(workload, c, seed=seed) for c, _ in cells}
 

@@ -108,7 +108,9 @@ def build_parser() -> argparse.ArgumentParser:
                     help="keep only entries whose name contains any of "
                          "the comma-separated substrings (models roster "
                          "only — lets a CI leg trace a subset of the zoo; "
-                         "never changes per-entry traces or store keys)")
+                         "never changes per-entry traces or store keys; "
+                         "with --check, filtered-out entries are not "
+                         "checked for divergence)")
     ap.add_argument("--processes", type=int, default=1, metavar="N",
                     help="fan whole entries across N worker processes "
                          "(0 = one per CPU; default 1 = in-process)")
@@ -183,6 +185,10 @@ def _main(args: argparse.Namespace, refs: int) -> int:
         print("# --filter only applies to the models roster "
               "(--sections models)", file=sys.stderr)
         return 2
+    if args.filter and args.check:
+        print("# note: --check only sees the filtered entries; "
+              "divergence in filtered-out zoo models goes unchecked",
+              file=sys.stderr)
     with obs.span("suite.registry", refs=refs,
                   sections=",".join(args.sections) or "-"):
         registry = registry_for(refs=refs, sections=args.sections,

@@ -43,6 +43,7 @@ from dataclasses import dataclass
 
 from repro import obs
 from repro.core import cachesim, classify
+from repro.core.scalability import sweep_configs
 from repro.core.sweep import CORE_SWEEP
 from repro.study.engine import SimEngine
 from repro.study.result import StudyResult
@@ -98,17 +99,24 @@ class RunStats:
 
 @functools.lru_cache(maxsize=1)
 def _worker_runner(refs: int, seed: int, cores: tuple[int, ...],
-                   backend: str,
-                   sections: tuple[str, ...]) -> "SuiteRunner":
+                   backend: str, sections: tuple[str, ...],
+                   store_root: str | None) -> "SuiteRunner":
     """Per-process runner over a rebuilt registry (fork/spawn-safe:
     constructed on first task, reused for every entry the worker gets).
     ``registry_for`` resolves the same roster the parent ran — the serving
-    scenarios when the serving section is on, the default roster else."""
+    scenarios when the serving section is on, the default roster else.
+    ``store_root`` (the parent's store directory) reconnects the worker to
+    the shared cell store, so simulation cells finished by any pool member
+    — this run or a previous one — are recalled instead of re-run."""
     from .registry import registry_for
 
-    return SuiteRunner(registry_for(refs=refs, sections=sections),
-                       seed=seed, cores=cores,
-                       backend=backend, store=None, sections=sections)
+    runner = SuiteRunner(registry_for(refs=refs, sections=sections),
+                         seed=seed, cores=cores,
+                         backend=backend, store=None, sections=sections)
+    if store_root is not None:
+        runner.study.engine.profile_store = \
+            ResultStore(store_root).sub("cells")
+    return runner
 
 
 def _characterize_entry(task: tuple) -> tuple:
@@ -120,10 +128,11 @@ def _characterize_entry(task: tuple) -> tuple:
     pool busy time aggregates across workers no matter how the pool is
     torn down.
     """
-    name, refs, seed, cores, backend, sections = task
+    name, refs, seed, cores, backend, sections, store_root = task
     t0 = time.perf_counter()
     with obs.span("suite.worker.entry", entry=name):
-        runner = _worker_runner(refs, seed, cores, backend, sections)
+        runner = _worker_runner(refs, seed, cores, backend, sections,
+                                store_root)
         entry = next(e for e in runner.registry if e.name == name)
         row = runner._characterize(entry)
     obs.count("pool.tasks")
@@ -164,9 +173,18 @@ class SuiteRunner:
         self.sections = tuple(s for s in SECTION_COLUMNS if s in sections)
         self.columns: tuple[str, ...] = ROSTER_COLUMNS + tuple(
             c for s in self.sections for c in SECTION_COLUMNS[s])
+        # Cell store (satellite of the roster store): content-addressed
+        # SimResult records shared across process-pool workers.  Scoped to
+        # pool runs — in-process runs already share cells through the
+        # engine memo, and the per-cell JSON round-trips would only slow
+        # the sequential path down.
+        pool = processes is not None and (processes == 0 or processes > 1)
+        cell_store = (store.sub("cells")
+                      if store is not None and pool else None)
         self.study = Study(
             suite=registry.workloads(), seed=seed, cores=self.cores,
-            engine=SimEngine(backend=self.backend),
+            engine=SimEngine(backend=self.backend,
+                             profile_store=cell_store),
         )
         self.stats = RunStats()
         self._rows: dict[str, tuple] = {}
@@ -338,6 +356,7 @@ class SuiteRunner:
         if not todo:
             return
         if processes is None or processes <= 1 or len(todo) == 1:
+            self._prewarm(todo)
             for entry in todo:
                 self._persist(entry, self._characterize(entry))
             return
@@ -353,7 +372,8 @@ class SuiteRunner:
         if remote:
             tasks = [
                 (e.name, self.registry.refs, self.seed, self.cores,
-                 self.backend, self.sections)
+                 self.backend, self.sections,
+                 str(self.store.root) if self.store is not None else None)
                 for e in remote
             ]
             # spawn, not fork: the parent may have JAX (or another
@@ -376,6 +396,56 @@ class SuiteRunner:
             obs.count("pool.workers", n_workers)
         for entry in local:
             self._persist(entry, self._characterize(entry))
+
+    def _prewarm(self, entries: list[SuiteEntry]) -> None:
+        """One cross-workload batch over every cell the roster pass needs.
+
+        Submitting the whole grid as a single
+        :meth:`~repro.study.engine.SimEngine.simulate_cells` call lets the
+        vectorized backend stack same-geometry nodes from *different*
+        traces into segmented stream profiles — one collapse + sort +
+        capped window scan per unique hierarchy geometry across the
+        roster, instead of one per entry.  The per-entry characterization
+        that follows then runs entirely on engine hits.  The grid mirrors
+        what the sections will ask for (``classify.measure``'s host sweep
+        always; the scalability/energy/serving sweeps when requested), so
+        no cell is simulated that would not have been.
+        """
+        factories = []
+        if set(self.sections) & {"scalability", "energy", "serving"}:
+            factories += list(sweep_configs(nuca=False).values())
+        if "serving" in self.sections:
+            # _best_mitigation also sweeps the NUCA variants
+            factories += list(sweep_configs(nuca=True).values())
+        items = [
+            (e.workload, c, cfg)
+            for e in entries
+            for c in self.cores
+            for cfg in ([cachesim.host_config(c)]
+                        + [f(c) for f in factories])
+        ]
+        if "serving" in self.sections:
+            # The phase timeline measures every scheduling window as a
+            # standalone workload (host sweep only, no mitigation grid);
+            # batching them here folds ~10 windows x entries into the same
+            # segmented pass.
+            from repro.serving.phases import _window_workload
+            from repro.serving.scenario import SCENARIOS
+            for e in entries:
+                if e.source != "serving" or e.name not in SCENARIOS:
+                    continue
+                scen = SCENARIOS[e.name]
+                items += [
+                    (_window_workload(scen, i, wt), c,
+                     cachesim.host_config(c))
+                    for i, wt in enumerate(
+                        scen.window_traces(seed=self.seed))
+                    for c in self.cores
+                ]
+        if items:
+            with obs.span("suite.prewarm", entries=len(entries),
+                          cells=len(items)):
+                self.study.engine.simulate_cells(items, seed=self.seed)
 
     def _reconstructible(self, entry: SuiteEntry) -> bool:
         """Would a worker's rebuilt default registry reproduce ``entry``

@@ -89,6 +89,14 @@ class ResultStore:
                 pass
             raise
 
+    def sub(self, name: str) -> "ResultStore":
+        """A store rooted at ``<root>/<name>`` — a namespaced sibling.
+
+        Used to keep record families with different schemas (roster rows
+        vs simulation-cell records) from colliding in one key space.
+        """
+        return ResultStore(self.root / name)
+
     def __len__(self) -> int:
         if not self.root.exists():
             return 0

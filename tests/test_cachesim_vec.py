@@ -258,11 +258,43 @@ class TestTraceMemo:
         assert len(memo.levels) == len(levels_after_host) + 1
         assert len(cachesim_vec._MEMOS) <= memo_count_before + 1
 
-    def test_memo_is_bounded(self):
-        for i in range(3 * cachesim_vec._MEMO_MAX):
-            cachesim_vec.simulate(np.arange(64) + 512 * i,
-                                  cachesim.host_config(1))
-        assert len(cachesim_vec._MEMOS) <= cachesim_vec._MEMO_MAX
+    def test_memo_is_bounded_by_bytes(self, monkeypatch):
+        """The pool is bounded by resident derived bytes, not entry
+        count; the most recent trace always survives eviction."""
+        monkeypatch.setattr(cachesim_vec, "_MEMOS", [])
+        monkeypatch.setattr(cachesim_vec, "_MEMO_BYTES_LAST", 0)
+        monkeypatch.setattr(cachesim_vec, "_MEMO_MAX_BYTES", 64 * 1024)
+        arrays = [np.arange(2048, dtype=np.int64) * 3 + 512 * i
+                  for i in range(8)]
+        for a in arrays:
+            cachesim_vec.simulate(a, cachesim.host_config(1))
+        # re-measure after the last memo filled with derived arrays
+        cachesim_vec.simulate(arrays[-1], cachesim.host_config(1))
+        resident = sum(m.nbytes() for m in cachesim_vec._MEMOS)
+        assert (resident <= cachesim_vec._MEMO_MAX_BYTES
+                or len(cachesim_vec._MEMOS) == 1)
+        assert cachesim_vec._MEMOS[-1].ref is arrays[-1]
+
+    def test_memo_evicts_under_byte_pressure(self, monkeypatch):
+        """Satellite: megaref traces cannot OOM the LRU — a pool past the
+        byte budget evicts, counts ``memo.evict`` and keeps the
+        ``memo.bytes`` gauge at the post-eviction resident total."""
+        from repro import obs
+
+        monkeypatch.setattr(cachesim_vec, "_MEMOS", [])
+        monkeypatch.setattr(cachesim_vec, "_MEMO_BYTES_LAST", 0)
+        monkeypatch.setattr(cachesim_vec, "_MEMO_MAX_BYTES", 32 * 1024)
+        obs.reset_counters()
+        arrays = [np.arange(4096, dtype=np.int64) * 5 + 777 * i
+                  for i in range(6)]
+        for a in arrays:
+            cachesim_vec.simulate(a, cachesim.host_config(1))
+        c = obs.counters()
+        assert c.get("memo.evict", 0) >= 1
+        # the gauge equals the pool total measured at the last lookup
+        assert c.get("memo.bytes", 0) == cachesim_vec._MEMO_BYTES_LAST
+        assert (cachesim_vec._MEMO_BYTES_LAST
+                <= cachesim_vec._MEMO_MAX_BYTES)
 
     def test_in_place_mutation_recomputes(self):
         """Mutating an address array between calls must not serve stale
@@ -342,7 +374,14 @@ class TestTraceMemo:
         for out in same_trace_out:
             assert out[0].level_hits == ref_host4.level_hits
             assert out[0].level_misses == ref_host4.level_misses
-        assert len(cachesim_vec._MEMOS) <= cachesim_vec._MEMO_MAX
+        # pool invariant after a fresh lookup re-measures the pool:
+        # within the byte budget, or a single over-budget survivor
+        cachesim_vec.simulate_batch(spec.addresses,
+                                    [cachesim.host_config(4)],
+                                    l3_factor=spec.l3_factor)
+        resident = sum(m.nbytes() for m in cachesim_vec._MEMOS)
+        assert (resident <= cachesim_vec._MEMO_MAX_BYTES
+                or len(cachesim_vec._MEMOS) == 1)
 
 
 @pytest.mark.slow

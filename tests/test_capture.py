@@ -104,6 +104,62 @@ class TestWalker:
 
 
 # --------------------------------------------------------------------------
+# Vectorized walker vs scalar reference (the gate promised in grid.py)
+# --------------------------------------------------------------------------
+class TestWalkDifferential:
+    """``_walk`` (vectorized) must be byte-identical to ``_walk_loop``
+    (the scalar reference) over the captured-kernel roster — addresses,
+    counters and footprints, in both full and count-only modes."""
+
+    def _captures(self):
+        rng = np.random.default_rng(11)
+        caps = [stream_capture.capture(v, 2**17)
+                for v in ("copy", "scale", "add", "triad")]
+        caps.append(flash_capture.capture(sq=256, sk=512, d=64))
+        caps.append(flash_capture.capture(sq=512, sk=1024, d=64))
+        caps.append(gather_capture.capture(1024, 128, 64, rng=rng))
+        return caps
+
+    def test_full_walk_byte_identical(self):
+        from repro.capture.grid import _walk, _walk_loop
+        for cap in self._captures():
+            vec = _walk(cap, count_only=False, bases=None)
+            ref = _walk_loop(cap, count_only=False, bases=None)
+            assert np.array_equal(vec.addresses, ref.addresses), cap.name
+            assert (vec.loads, vec.stores, vec.flops, vec.grid_steps,
+                    vec.footprint_words) == (
+                ref.loads, ref.stores, ref.flops, ref.grid_steps,
+                ref.footprint_words), cap.name
+
+    def test_count_only_byte_identical(self):
+        from repro.capture.grid import _walk, _walk_loop
+        for cap in self._captures():
+            vec = _walk(cap, count_only=True, bases=None)
+            ref = _walk_loop(cap, count_only=True, bases=None)
+            assert vec.addresses.size == ref.addresses.size == 0
+            assert (vec.loads, vec.stores, vec.refs) == (
+                ref.loads, ref.stores, ref.refs), cap.name
+
+    def test_shared_name_aliasing_matches(self):
+        # two input operands under one name: the fetch decision consults
+        # the merged same-name sequence — the exact semantics the
+        # vectorized masks must reproduce
+        from repro.capture.grid import _walk, _walk_loop
+        cap = GridCapture("alias", (4, 4), operands=(
+            OperandSpec("t", "in", (64, 128), (8, 128),
+                        lambda i, j: (i % 2, 0)),
+            OperandSpec("t", "in", (64, 128), (8, 128),
+                        lambda i, j: (j % 3, 0)),
+            OperandSpec("o", "out", (64, 128), (8, 128),
+                        lambda i, j: (i, 0)),
+        ))
+        vec = _walk(cap, count_only=False, bases=None)
+        ref = _walk_loop(cap, count_only=False, bases=None)
+        assert np.array_equal(vec.addresses, ref.addresses)
+        assert (vec.loads, vec.stores) == (ref.loads, ref.stores)
+
+
+# --------------------------------------------------------------------------
 # Captured workloads (the suite's `captured` source)
 # --------------------------------------------------------------------------
 class TestCapturedWorkloads:

@@ -297,9 +297,10 @@ class TestHotPathCounters:
         assert c["node.reuse"] == 3 and "node.compute" not in c
         assert "profile.scan" not in c  # nothing re-scanned
 
-    def test_scan_invariant_profile_scan_equals_geom(self):
+    def test_scan_invariant_profile_scan_bounded_by_geom(self):
         """The CI gate's cold-run invariant, at unit scale: every
-        StreamProfile construction goes through the memo."""
+        StreamProfile construction covers at least one unique geometry —
+        segmented scans cover several at once, so scan <= geom."""
         from repro.core import cachesim, cachesim_vec, tracegen
 
         w = tracegen.make_suite(refs=2_000)[1]
@@ -309,7 +310,11 @@ class TestHotPathCounters:
         obs.reset_counters()
         cachesim_vec.simulate_batch(addr, cfgs)
         c = obs.counters()
-        assert c["profile.scan"] == c["profile.geom"] > 0
+        assert 0 < c["profile.scan"] <= c["profile.geom"]
+        # the two LLC variants behind the host-L2 and pf-L2 miss streams
+        # share one segmented scan, so here the bound is strict
+        assert c["profile.scan"] < c["profile.geom"]
+        assert c.get("profile.segments", 0) >= 2
 
 
 # --------------------------------------------------------------------------
@@ -445,7 +450,7 @@ class TestCLI:
         rep = aggregate([trace])
         assert rep.spans["study.run"].count == 1
         assert rep.counter("engine.trace.run") > 0
-        assert rep.counter("profile.scan") == rep.counter("profile.geom") > 0
+        assert 0 < rep.counter("profile.scan") <= rep.counter("profile.geom")
         # per-stage total within 10% of the trace's end-to-end wall
         assert rep.span_total("study.run") >= 0.9 * rep.wall_s
 

@@ -486,6 +486,29 @@ class TestRosterSections:
         with pytest.raises(SystemExit):
             main(["--sections", "nope"])
 
+    def test_cli_filter_requires_models_section(self, capsys):
+        from repro.suite.__main__ import main
+
+        assert main(["--filter", "qwen", "--no-store"]) == 2
+        err = capsys.readouterr().err
+        assert "--filter only applies to the models roster" in err
+
+    def test_cli_filter_with_check_warns_about_unchecked_entries(
+            self, capsys, monkeypatch):
+        from repro.suite import __main__ as cli
+
+        # stop before any simulation: the warning must be emitted during
+        # argument handling, not after the (expensive) roster run
+        def boom(*a, **kw):
+            raise RuntimeError("stop-after-warning")
+
+        monkeypatch.setattr(cli, "registry_for", boom)
+        with pytest.raises(RuntimeError, match="stop-after-warning"):
+            cli.main(["--sections", "models", "--filter", "qwen",
+                      "--check", "--no-store"])
+        err = capsys.readouterr().err
+        assert "--check only sees the filtered entries" in err
+
 
 class TestCapturedPoolFallback:
     def test_hand_registered_captured_entry_runs_in_process(self, tmp_path):
