@@ -29,9 +29,16 @@ Sections map 1:1 to paper artifacts:
            ``serving_warm`` re-rosters against that store, timing the
            pure content-addressed recall path
 - models — the whole-model roster (repro.capture.zoo): traces + classifies
-           the 16 end-to-end decode/train zoo steps cold against its own
-           throwaway store, timing jaxpr walk + eqn lowering + windowed
-           trace walks end to end (skipped when jax is unavailable)
+           the CI-pair subset of the 176-entry axis sweep (one dense + one
+           SSM config across decode/prefill/eval/train x batch x geometry)
+           cold against its own throwaway store, timing jaxpr walk + eqn
+           lowering + windowed trace walks end to end (skipped when jax
+           is unavailable)
+- models_sweep — the streamed whole-step data path: the zoo's bs64 decode
+           megaref walk fed op-by-op (ModelCapture.walk_stream) into
+           cachesim_stream.simulate_chunked, never materializing a
+           concatenated trace (CI gates capture.model.concat==0 over
+           this section's obs trace)
 - megaref — the chunk-streaming simulator over one long bounded-footprint
            trace (2M refs fast / 10M full), always cold: times
            ``cachesim_stream.simulate_chunked`` end to end
@@ -184,9 +191,12 @@ def main() -> None:
         res.name = section
         return res
 
-    # whole-model roster: cold jaxpr walk + windowed trace + classify for
-    # the 16 zoo steps.  Same throwaway-store rationale as serving; needs
-    # jax to trace (gated, not stubbed — there is no jax-free fallback).
+    # whole-model roster: cold jaxpr walk + windowed trace + classify.
+    # The zoo is now a 176-entry axis sweep, so this section times the
+    # CI-pair subset (one dense + one SSM config across every mode /
+    # batch / geometry — 46 entries); the full sweep is a local run.
+    # Same throwaway-store rationale as serving; needs jax to trace
+    # (gated, not stubbed — there is no jax-free fallback).
     def models_roster():
         from repro.suite import SuiteRunner, models_registry
         from repro.study.result import StudyResult
@@ -196,12 +206,49 @@ def main() -> None:
         except ImportError:
             return StudyResult(name="models", columns=("name", "note"),
                                rows=[("models", "skipped: no jax")])
-        runner = SuiteRunner(models_registry(refs=refs),
-                             store=_serving_store(), backend=args.backend,
-                             sections=("models",))
+        runner = SuiteRunner(
+            models_registry(refs=refs,
+                            only=("qwen2.5-14b", "mamba2-780m")),
+            store=_serving_store(), backend=args.backend,
+            sections=("models",))
         res = runner.roster()
         res.name = "models"
         return res
+
+    # models_sweep: the streamed whole-step data path — the zoo's biggest
+    # decode entry (bs64, a megaref walk) fed op-by-op from
+    # ModelCapture.walk_stream into cachesim_stream.simulate_chunked.  No
+    # concatenated trace array is ever materialized (the obs counter gate
+    # in CI asserts capture.model.concat==0 over this section), so peak
+    # trace memory is the largest single op.  Always cold, like megaref.
+    def models_sweep_rows():
+        from repro.study.result import StudyResult
+
+        try:
+            import jax  # noqa: F401
+        except ImportError:
+            return StudyResult(name="models_sweep",
+                               columns=("name", "note"),
+                               rows=[("models_sweep", "skipped: no jax")])
+        from repro.capture.zoo import capture_for
+        from repro.core import cachesim
+        from repro.core.cachesim_stream import DEFAULT_CHUNK, simulate_chunked
+
+        entry = "model.qwen2.5-14b.decode.bs64"
+        mc = capture_for(entry)
+        refs_whole = mc.walk(count_only=True).refs
+        header = ("name", "refs", "chunk", "l1_misses", "llc_misses",
+                  "lfmr", "mpki")
+        rows = []
+        for cfg in (cachesim.host_config(4), cachesim.ndp_config(4)):
+            sim = simulate_chunked(
+                mc.walk_stream(), cfg, chunk=DEFAULT_CHUNK,
+                name=f"{entry}.{cfg.name}",
+                scan="jax" if args.backend == "jax" else None)
+            rows.append((sim.name, refs_whole, DEFAULT_CHUNK,
+                         sim.l1_misses, sim.level_misses[-1],
+                         round(sim.lfmr, 4), round(sim.mpki, 2)))
+        return rows, header
 
     # megaref: the chunk-streaming path over a single long trace with a
     # bounded footprint (the whole-model shape: refs grow, the working
@@ -247,6 +294,7 @@ def main() -> None:
         "serving": lambda: serving_roster("serving"),
         "serving_warm": lambda: serving_roster("serving_warm"),
         "models": models_roster,
+        "models_sweep": models_sweep_rows,
         "megaref": megaref_rows,
         "case1": lambda: paper_figures.case1_noc(study),
         "case2": lambda: paper_figures.case2_accelerators(study),

@@ -1,0 +1,61 @@
+"""Regenerate the model zoo's pinned (AI, class) table.
+
+Runs every swept zoo entry through the full capture -> locality ->
+core-sweep -> classify pipeline (computing AI from live captures, i.e.
+ignoring any existing pins) and prints the ``_PINS`` literal for
+``src/repro/capture/zoo.py`` plus the measured transition boundaries.
+
+Usage::
+
+    PYTHONPATH=src python scripts/pin_zoo.py [--only SUB[,SUB]]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from repro.capture import zoo
+from repro.core import classify
+from repro.core.tracegen import Workload
+from repro.study.engine import SimEngine
+from repro.study.study import Study
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    only = tuple(args.only.split(",")) if args.only else None
+
+    specs = [s for s in zoo.MODEL_ZOO
+             if only is None or any(sub in s.name for sub in only)]
+    # Strip pins: recompute AI from live captures.
+    from dataclasses import replace
+    specs = [replace(s, ai=None) for s in specs]
+    workloads = zoo.model_workloads(tuple(specs))
+    study = Study(suite=workloads)
+
+    print(f"# {len(specs)} entries", file=sys.stderr)
+    t_all = time.time()
+    lines = []
+    for spec, w in zip(specs, workloads):
+        t0 = time.time()
+        m = study.metrics(w)
+        cls = classify.classify(m)
+        lines.append(f'    "{spec.name}": ({w.ai_ops_per_access}, "{cls}"),')
+        print(f"{spec.name:48s} ai={w.ai_ops_per_access:8.3f} -> {cls} "
+              f"(t={m.temporal:.3f} mpki={m.mpki:.1f} "
+              f"lfmr={m.lfmr_mean:.3f} slope={m.lfmr_slope:.3f}) "
+              f"[{time.time()-t0:.1f}s]", file=sys.stderr)
+    print(f"# total {time.time()-t_all:.0f}s", file=sys.stderr)
+    print("_PINS: dict[str, tuple[float, str]] = {")
+    print("\n".join(lines))
+    print("}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -143,12 +143,66 @@ class ModelCapture:
             steps += r.grid_steps
             if not count_only:
                 chunks.append(r.addresses)
+        if not count_only:
+            from repro import obs
+
+            # Counted so the streamed data path (walk_stream ->
+            # simulate_chunked) can be *gated* on never materializing a
+            # concatenated whole-step trace (benchmarks.perf_gate
+            # --obs-require 'capture.model.concat==0').
+            obs.count("capture.model.concat")
         addr = (np.concatenate(chunks) if chunks
                 else np.empty(0, dtype=np.int64))
         return CaptureResult(
             name=self.name, addresses=addr, loads=loads, stores=stores,
             footprint_words=self.footprint_words, grid_steps=steps,
             flops=self.flops)
+
+    def walk_stream(self, target_refs: int | None = None, *,
+                    center: float = 0.5):
+        """Yield per-op address blocks in program order, never concatenated.
+
+        The generator form of :meth:`walk` / :meth:`walk_window`: feeding
+        it to :func:`repro.core.cachesim_stream.simulate_chunked` (which
+        accepts any iterable of address blocks) simulates the whole step
+        under a fixed memory ceiling — peak trace memory is the largest
+        single op's walk, regardless of how many megarefs the step emits.
+        Counter identity is structural: with ``target_refs=None`` the
+        yielded blocks concatenate to exactly ``walk().addresses``; with a
+        target they concatenate to ``walk_window(target_refs, center=
+        center).addresses`` (same count-only sizing pass, same boundary
+        slices).  Like ``walk_window``, a shorter-than-target step streams
+        whole (callers cycle it, the ``np.resize`` convention).
+        """
+        from repro import obs
+
+        if target_refs is None:
+            for op in self.ops:
+                addr = op.walk().addresses
+                if addr.size:
+                    obs.count("capture.model.stream_blocks")
+                    yield addr
+            return
+        if target_refs <= 0:
+            raise ValueError("target_refs must be positive")
+        counts = [op.walk(count_only=True) for op in self.ops]
+        total = sum(r.refs for r in counts)
+        if total <= target_refs:
+            yield from self.walk_stream()
+            return
+        start = int((total - target_refs) * min(max(center, 0.0), 1.0))
+        end = start + target_refs
+        pos = 0
+        for op, r in zip(self.ops, counts):
+            nxt = pos + r.refs
+            if nxt > start and pos < end:
+                blk = op.walk().addresses[max(0, start - pos):end - pos]
+                if blk.size:
+                    obs.count("capture.model.stream_blocks")
+                    yield blk
+            pos = nxt
+            if pos >= end:
+                break
 
     def walk_window(self, target_refs: int, *,
                     center: float = 0.5) -> CaptureResult:
@@ -183,6 +237,9 @@ class ModelCapture:
             pos = nxt
             if pos >= end:
                 break
+        from repro import obs
+
+        obs.count("capture.model.concat")  # windowed traces materialize too
         addr = np.concatenate(chunks)
         loads = sum(r.loads for r in counts)
         w_loads = int(round(loads * target_refs / total))

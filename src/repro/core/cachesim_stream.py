@@ -297,7 +297,9 @@ def _replay_level_chunked(blocks, sets: int, ways: int, *, chunk: int,
 
 def _line_blocks(addresses, chunk: int):
     """Yield ``// WORDS_PER_LINE`` line blocks from an ndarray or any
-    iterable of address blocks."""
+    iterable of address blocks (e.g. a ``ModelCapture.walk_stream``
+    generator feeding op-by-op walks straight in — the streamed
+    whole-model data path, counted as ``stream.gen.blocks``)."""
     if isinstance(addresses, np.ndarray):
         addr = addresses
         for lo in range(0, int(addr.size), chunk):
@@ -305,6 +307,7 @@ def _line_blocks(addresses, chunk: int):
                              dtype=np.int64) // WORDS_PER_LINE
         return
     for blk in addresses:
+        obs.count("stream.gen.blocks")
         yield np.asarray(blk, dtype=np.int64) // WORDS_PER_LINE
 
 

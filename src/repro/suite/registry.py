@@ -135,6 +135,12 @@ class SuiteRegistry:
 
     entries: list[SuiteEntry] = field(default_factory=list)
     refs: int | None = None
+    # The --filter applied when this registry was built (models roster
+    # only).  Carried so process-pool workers rebuild the *filtered*
+    # registry — filtering subsets a roster without changing any entry
+    # (fingerprint-tested), and an unfiltered rebuild would trace the
+    # whole 176-entry zoo in every worker.
+    only: tuple[str, ...] | None = None
 
     def register(self, workload: Workload, *, domain: str, source: str,
                  **params: object) -> SuiteEntry:
@@ -261,24 +267,28 @@ def serving_registry(*, refs: int | None = None) -> SuiteRegistry:
 
 def models_registry(*, refs: int | None = None,
                     only: tuple[str, ...] | None = None) -> SuiteRegistry:
-    """The whole-model roster: one entry per model-zoo (config, mode, bs).
+    """The whole-model roster: one entry per swept model-zoo point —
+    (config, mode, batch, cache/sequence geometry), 176 entries over the
+    10 smoke configs.
 
-    Building it traces each config's jitted step with jax
-    (:mod:`repro.capture.zoo`) — unlike the default roster there is no
-    jax-free fallback; a jax-less interpreter should stick to the
-    synthetic + captured sections.  Model traces are abstract and
-    deterministic and do **not** scale with ``refs`` (the marker is
-    carried for worker reconstruction, like the serving roster).
+    Every entry's AI and expected class are pinned in the zoo
+    declarations, so *building* the registry is trace-free (and
+    jax-free); jax is needed when an entry's trace is first simulated —
+    there is no jax-free fallback for that, so a jax-less interpreter
+    should stick to the synthetic + captured sections.  Model traces are
+    abstract and deterministic and do **not** scale with ``refs`` (the
+    marker is carried for worker reconstruction, like the serving
+    roster).
 
     ``only`` keeps entries whose name contains any of the given
-    substrings (the CI roster leg traces two small configs, not the whole
-    zoo); filtering changes neither traces nor fingerprints, so store
-    rows recall across differently-filtered runs.
+    substrings (the CI roster leg simulates two configs' sweeps, not the
+    whole zoo); filtering changes neither traces nor fingerprints, so
+    store rows recall across differently-filtered runs.
     """
     from repro.capture.zoo import MODEL_ZOO, model_workloads
 
     refs = tracegen.DEFAULT_REFS if refs is None else refs
-    reg = SuiteRegistry(refs=refs)
+    reg = SuiteRegistry(refs=refs, only=only)
     specs = [
         s for s in MODEL_ZOO
         if only is None or any(sub in s.name for sub in only)
@@ -294,9 +304,9 @@ def registry_for(*, refs: int | None = None,
     """The registry a roster request resolves to: the serving roster when
     the ``serving`` section is requested, the whole-model roster for the
     ``models`` section, the default roster otherwise.  Both the CLI and
-    the process-pool workers route through here, so a fanned-out serving
-    or model entry reconstructs in its worker (workers pass no ``only``
-    filter — it subsets a roster, never changes an entry)."""
+    the process-pool workers route through here; workers pass the
+    parent registry's ``only`` marker, which subsets the models roster
+    without changing any entry."""
     if "serving" in sections:
         return serving_registry(refs=refs)
     if "models" in sections:

@@ -68,17 +68,18 @@ ROSTER_COLUMNS = (
 # phase, the full per-window class timeline) and the best-performing
 # data-movement mitigation with its speedup over the plain host at the
 # sweep's top core count; requesting it also swaps the roster to the
-# repro.serving scenarios (see registry_for).  ``models``: whole-step op
-# census (total / dense / stream / pallas op counts and the shared
-# address-space footprint) from the entry's memoized ModelCapture;
-# requesting it swaps the roster to the model zoo.
+# repro.serving scenarios (see registry_for).  ``models``: the entry's
+# swept axes (mode, batch, cache/sequence geometry) plus the whole-step
+# op census (total / dense / stream / pallas op counts and the shared
+# address-space footprint) from the zoo's capture census; requesting it
+# swaps the roster to the model zoo.
 SECTION_COLUMNS: dict[str, tuple[str, ...]] = {
     "scalability": ("host_speedup", "ndp_speedup"),
     "energy": ("host_mj", "ndp_mj", "ndp_energy_ratio"),
     "serving": ("windows", "phases", "dominant_phase", "phase_timeline",
                 "best_mitigation", "best_speedup"),
-    "models": ("model_ops", "dense_ops", "stream_ops", "pallas_ops",
-               "footprint_mib"),
+    "models": ("mode", "batch", "geometry", "model_ops", "dense_ops",
+               "stream_ops", "pallas_ops", "footprint_mib"),
 }
 
 # A mitigation must beat the plain host by this factor before the roster
@@ -100,17 +101,22 @@ class RunStats:
 @functools.lru_cache(maxsize=1)
 def _worker_runner(refs: int, seed: int, cores: tuple[int, ...],
                    backend: str, sections: tuple[str, ...],
-                   store_root: str | None) -> "SuiteRunner":
+                   store_root: str | None,
+                   only: tuple[str, ...] | None = None) -> "SuiteRunner":
     """Per-process runner over a rebuilt registry (fork/spawn-safe:
     constructed on first task, reused for every entry the worker gets).
     ``registry_for`` resolves the same roster the parent ran — the serving
-    scenarios when the serving section is on, the default roster else.
-    ``store_root`` (the parent's store directory) reconnects the worker to
-    the shared cell store, so simulation cells finished by any pool member
-    — this run or a previous one — are recalled instead of re-run."""
+    scenarios when the serving section is on, the models roster (with the
+    parent's ``only`` filter, so a filtered sweep run never rebuilds the
+    whole zoo in a worker) for the models section, the default roster
+    else.  ``store_root`` (the parent's store directory) reconnects the
+    worker to the shared cell store, so simulation cells finished by any
+    pool member — this run or a previous one — are recalled instead of
+    re-run."""
     from .registry import registry_for
 
-    runner = SuiteRunner(registry_for(refs=refs, sections=sections),
+    runner = SuiteRunner(registry_for(refs=refs, sections=sections,
+                                      only=only),
                          seed=seed, cores=cores,
                          backend=backend, store=None, sections=sections)
     if store_root is not None:
@@ -128,11 +134,11 @@ def _characterize_entry(task: tuple) -> tuple:
     pool busy time aggregates across workers no matter how the pool is
     torn down.
     """
-    name, refs, seed, cores, backend, sections, store_root = task
+    name, refs, seed, cores, backend, sections, store_root, only = task
     t0 = time.perf_counter()
     with obs.span("suite.worker.entry", entry=name):
         runner = _worker_runner(refs, seed, cores, backend, sections,
-                                store_root)
+                                store_root, only)
         entry = next(e for e in runner.registry if e.name == name)
         row = runner._characterize(entry)
     obs.count("pool.tasks")
@@ -250,18 +256,15 @@ class SuiteRunner:
         return phase_cols + self._best_mitigation(entry)
 
     def _model_values(self, entry: SuiteEntry) -> tuple:
-        """Whole-step op census for a model entry (placeholder columns on
-        any other source — the section can ride on other rosters too)."""
+        """Swept axes + whole-step op census for a model entry
+        (placeholder columns on any other source — the section can ride
+        on other rosters too)."""
         if entry.source != "model":
-            return (0, 0, 0, 0, 0.0)
-        from repro.capture.zoo import get_capture
+            return ("-", 0, "-", 0, 0, 0, 0, 0.0)
+        from repro.capture.zoo import census_for
 
         p = dict(entry.params)
-        mc = get_capture(p["config"], p["mode"], p["batch"])
-        kinds = mc.op_kinds
-        return (len(mc.ops), kinds.get("dense", 0), kinds.get("stream", 0),
-                kinds.get("pallas", 0),
-                round(mc.footprint_words * 8 / 2**20, 3))
+        return (p["mode"], p["batch"], p["geometry"]) + census_for(entry.name)
 
     def _best_mitigation(self, entry: SuiteEntry) -> tuple:
         """(name, speedup) of the best substrate vs the plain host at the
@@ -373,7 +376,8 @@ class SuiteRunner:
             tasks = [
                 (e.name, self.registry.refs, self.seed, self.cores,
                  self.backend, self.sections,
-                 str(self.store.root) if self.store is not None else None)
+                 str(self.store.root) if self.store is not None else None,
+                 self.registry.only)
                 for e in remote
             ]
             # spawn, not fork: the parent may have JAX (or another
@@ -470,7 +474,8 @@ class SuiteRunner:
             self._rebuilt = {
                 e.name: e
                 for e in registry_for(refs=self.registry.refs,
-                                      sections=self.sections)
+                                      sections=self.sections,
+                                      only=self.registry.only)
             }
         return self._rebuilt
 

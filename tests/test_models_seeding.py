@@ -1,0 +1,98 @@
+"""Regression: the swept model zoo is hash-seed and filter independent.
+
+Same protocol as ``test_serving_seeding``: the zoo derives nothing from
+builtin ``hash()`` — registry fingerprints (now computed from pinned AI,
+no jax trace) and the windowed capture traces behind the swept entries
+must be byte-identical across interpreter launches with different
+PYTHONHASHSEED values.  And ``--filter`` subsetting must never change a
+store key: a row simulated under a filtered run is recalled verbatim by
+the full run.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+_FP_KW = "seed=0, cores=(1, 4), backend='vectorized', sections=('models',)"
+
+_CHILD = rf"""
+import zlib
+from repro.suite.registry import models_registry
+
+digest = 0
+# every swept entry's store key, in roster order (jax-free: AI is pinned)
+for e in models_registry(refs=20_000):
+    digest = zlib.crc32(e.name.encode(), digest)
+    digest = zlib.crc32(e.fingerprint({_FP_KW}).encode(), digest)
+
+# two swept captures' windowed traces (jax: capture -> walk_window)
+import numpy as np
+from repro.capture.zoo import model_workloads
+
+for name in ("model.qwen2.5-14b.decode.bs8.c4096",
+             "model.whisper-large-v3.prefill.bs8.s512"):
+    (w,) = model_workloads(only=(name,))
+    spec = w.trace(4, seed=7)
+    digest = zlib.crc32(np.ascontiguousarray(spec.addresses).tobytes(),
+                        digest)
+print(digest)
+"""
+
+
+def _digest_under_hash_seed(hash_seed: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONHASHSEED"] = hash_seed
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = os.path.abspath(src)
+    out = subprocess.run(
+        [sys.executable, "-c", _CHILD], env=env,
+        capture_output=True, text=True, check=True,
+    )
+    return out.stdout.strip()
+
+
+@pytest.mark.slow  # three fresh interpreter subprocesses, two captures each
+def test_zoo_fingerprints_and_traces_equal_across_hash_seeds():
+    digests = {_digest_under_hash_seed(s) for s in ("0", "1", "31337")}
+    assert len(digests) == 1, \
+        f"model zoo digests diverge across hash seeds: {digests}"
+
+
+def test_filter_subsetting_never_changes_store_keys():
+    """Filtered registries carry the same per-entry fingerprints as the
+    full roster — trace-free to check now that AI is pinned, so every
+    swept axis is covered, not a sample."""
+    from repro.suite.registry import models_registry
+
+    kw = dict(seed=0, cores=(1, 4), backend="vectorized",
+              sections=("models",))
+    full = {e.name: e.fingerprint(**kw)
+            for e in models_registry(refs=20_000)}
+    for only in (("qwen2.5-14b", "mamba2-780m"),   # the CI pair
+                 ("c4096", "c16384", "c65536"),    # deep-cache sub-sweep
+                 ("prefill", "eval"),              # the new modes
+                 ("train.bs4.s512",)):             # long-sequence train
+        sub = models_registry(refs=20_000, only=only)
+        assert 0 < len(sub) < len(full)
+        for e in sub:
+            assert e.fingerprint(**kw) == full[e.name], (only, e.name)
+
+
+def test_registry_build_is_trace_free():
+    """Building and fingerprinting all 176 entries must never trace a
+    model: pinned AI keeps worker registry rebuilds and --list cheap
+    (jax loads at package import, but no capture may run)."""
+    from repro import obs
+    from repro.suite.registry import models_registry
+
+    obs.reset_counters()
+    rs = models_registry(refs=20_000)
+    assert len(rs) >= 150
+    for e in rs:
+        e.fingerprint(seed=0, cores=(1, 4), backend="vectorized",
+                      sections=("models",))
+    c = obs.counters()
+    assert "capture.model.captures" not in c
+    assert "capture.model.concat" not in c
